@@ -1,0 +1,59 @@
+"""Shared benchmark utilities.
+
+Wall-clock numbers on this CPU container are *indicative* (the TPU is the
+target, not the runtime); every bench therefore also derives the analytic
+quantity the paper's table is actually about (loss, comm steps, traffic,
+memory). Multi-device timing benches run in subprocesses with 8 virtual
+host devices so the main process keeps its single default device.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def timeit(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    _block(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _block(out):
+    import jax
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+
+
+def run_subprocess_bench(code: str, *, devices: int = 8,
+                         timeout: int = 1200) -> dict:
+    """Run `code` (which must print a JSON dict on its last line) in a
+    subprocess with N virtual devices."""
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={devices}'\n"
+        f"import sys; sys.path.insert(0, {SRC!r})\n")
+    proc = subprocess.run([sys.executable, "-c", prelude + code],
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def emit(rows, header=None):
+    """Print CSV rows: name,us_per_call,derived."""
+    if header:
+        print(header)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,84 @@
+"""Paper Fig. 3: SP-method speed comparison (LASP-2 vs LASP-1 vs Ring
+Attention vs Megatron-SP).
+
+Measured: wall-clock of each SP method's attention layer on 8 virtual
+devices, sequence lengths 8K→64K (CPU-indicative). Derived: the paper
+§3.4 communication model at the paper's scale (64 GPUs, 2048K tokens):
+communication steps per iteration and traffic per device per layer.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_subprocess_bench
+
+_CODE = r"""
+import json, time
+import jax, jax.numpy as jnp
+from repro.core.lasp2 import lasp2, SPConfig
+from repro.core.baselines import lasp1, ring_attention, megatron_sp_attention
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+sp = SPConfig(mesh=mesh, sp_axis="data")
+B, H, d = 1, 8, 64
+res = {}
+for S in (8192, 16384, 32768):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.bfloat16) * 0.3
+    k = jax.random.normal(ks[1], (B, H, S, d), jnp.bfloat16) * 0.3
+    v = jax.random.normal(ks[2], (B, H, S, d), jnp.bfloat16) * 0.5
+    fns = {
+        "lasp2": jax.jit(lambda a,b,c: lasp2(a,b,c, sp=sp)),
+        "lasp1": jax.jit(lambda a,b,c: lasp1(a,b,c, sp=sp)),
+    }
+    if S <= 8192:  # quadratic baselines are compile/OOM-hostile on CPU
+        fns["ring_attention"] = jax.jit(lambda a,b,c: ring_attention(a,b,c, sp=sp))
+        fns["megatron_sp"] = jax.jit(lambda a,b,c: megatron_sp_attention(a,b,c, sp=sp))
+    for name, f in fns.items():
+        f(q, k, v)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = f(q, k, v)
+        out.block_until_ready()
+        dt = (time.perf_counter() - t0) / 3
+        res[f"{name}@{S}"] = dt * 1e6
+print(json.dumps(res))
+"""
+
+
+def analytic_rows():
+    """Paper §3.4 at the paper's scale: W=64, B=1, H=16(heads)·d=128/head
+    (Linear-Llama3-1B per-head states), N=2048K, per layer."""
+    w, bh, dk, dv = 64, 16, 128, 128
+    n, dmodel = 2 ** 21, 2048
+    state = bh * dk * dv * 2                      # bf16 bytes
+    rows = []
+    rows.append(("derived/lasp2_comm_steps_per_iter", 0, 2))
+    rows.append(("derived/lasp1_comm_steps_per_iter", 0, 2 * (w - 1)))
+    rows.append(("derived/lasp2_fwd_traffic_per_dev_MB", 0,
+                 round((w - 1) / w * w * state / 1e6, 2)))
+    rows.append(("derived/lasp1_fwd_traffic_per_dev_MB", 0,
+                 round((w - 1) * state / 1e6, 2)))
+    # Megatron-SP gathers activations: N/W tokens × d per gather, 2 gathers
+    rows.append(("derived/megatron_sp_fwd_traffic_per_dev_MB", 0,
+                 round(2 * (w - 1) / w * n * dmodel * 2 / 1e6, 2)))
+    # Ring attention circulates K+V chunks: (W-1) steps × 2·C·d
+    rows.append(("derived/ring_fwd_traffic_per_dev_MB", 0,
+                 round((w - 1) * 2 * (n // w) * dmodel * 2 / 1e6, 2)))
+    return rows
+
+
+def main():
+    rows = []
+    res = run_subprocess_bench(_CODE, devices=8, timeout=2400)
+    for k, us in sorted(res.items()):
+        rows.append((f"fig3/{k}", us, "tokens/s="
+                     + str(round(int(k.split("@")[1]) / (us / 1e6)))))
+    rows += [(f"fig3/{n}", u, d) for n, u, d in analytic_rows()]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,table2,...]
+
+Prints ``name,us_per_call,derived`` CSV rows per bench. Wall-clock values
+are CPU-indicative; the ``derived`` column carries the quantity each paper
+table is about (loss / traffic / memory / comm steps).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ["fig3_speed", "table2_convergence", "table3_bidirectional",
+           "table4_hybrid_ratio", "table5_gather_splits",
+           "table6_scalability"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in BENCHES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name}: done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name}/FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

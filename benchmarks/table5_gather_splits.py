@@ -1,0 +1,72 @@
+"""Paper Table 5 (Appendix A.5.3): varying split sizes of gathering.
+
+The paper splits the memory-state AllGather into 1/4/16/64 chunked
+gathers and finds throughput nearly unchanged — evidence that the
+*workflow reorganization*, not merely the collective choice, delivers the
+win. We reproduce: time LASP-2 with its state gather split into k
+sequential all-gathers, k ∈ {1, 4, 16}.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_subprocess_bench
+
+_CODE = r"""
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core.linear_attention import chunk_scan, chunk_summaries
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+B, H, S, d = 1, 16, 65536, 128
+key = jax.random.PRNGKey(0)
+ks = jax.random.split(key, 3)
+q = jax.random.normal(ks[0], (B, H, S, d), jnp.bfloat16) * 0.3
+k = jax.random.normal(ks[1], (B, H, S, d), jnp.bfloat16) * 0.3
+v = jax.random.normal(ks[2], (B, H, S, d), jnp.bfloat16) * 0.5
+
+def lasp2_split(n_splits):
+    def local(q_, k_, v_):
+        m_loc, _ = chunk_summaries(k_, v_, None, block_size=128)
+        parts = jnp.split(m_loc, n_splits, axis=1)  # split over heads
+        gathered = [jax.lax.all_gather(p, "data") for p in parts]
+        ms = jnp.concatenate(gathered, axis=2)      # (W,B,H,d,d)
+        t = jax.lax.axis_index("data")
+        w_idx = jnp.arange(8)
+        wmask = (w_idx < t).astype(jnp.float32).reshape(8, 1, 1, 1, 1)
+        m_prev = jnp.sum(ms * wmask, axis=0)
+        out = chunk_scan(q_, k_, v_, None, block_size=128)
+        o = out.o.astype(jnp.float32) + jnp.einsum(
+            "bhsk,bhkv->bhsv", q_.astype(jnp.float32), m_prev)
+        return o.astype(q_.dtype)
+    spec = P(None, None, "data", None)
+    return jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(spec,)*3,
+                                 out_specs=spec, axis_names={"data"},
+                                 check_vma=False))
+
+res = {}
+for n_splits in (1, 4, 16):
+    f = lasp2_split(n_splits)
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = f(q, k, v)
+    out.block_until_ready()
+    res[f"splits_{n_splits}"] = (time.perf_counter() - t0) / 3 * 1e6
+print(json.dumps(res))
+"""
+
+
+def main():
+    res = run_subprocess_bench(_CODE, devices=8, timeout=1200)
+    base = res["splits_1"]
+    rows = [(f"table5/{k}", us,
+             f"tokens/s={round(65536 / (us / 1e6))};rel={us / base:.3f}")
+            for k, us in sorted(res.items())]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

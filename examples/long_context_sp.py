@@ -1,0 +1,79 @@
+"""Long-context sequence parallelism demo: shard a 64K-token sequence over
+8 virtual devices with LASP-2, verify exactness vs the local computation,
+and show the communication difference vs LASP-1 / Ring Attention straight
+from the compiled HLO (the paper's §3.4 comparison, reproduced
+structurally).
+
+This example re-execs itself with 8 virtual CPU devices.
+
+  PYTHONPATH=src python examples/long_context_sp.py
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, "src")
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import lasp1, megatron_sp_attention
+from repro.core.lasp2 import SPConfig, lasp2
+
+
+def collective_report(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    ops = {}
+    for op in ("all-gather", "all-reduce", "reduce-scatter",
+               "collective-permute", "all-to-all"):
+        n = len(re.findall(rf"{op}\(", txt))
+        if n:
+            ops[op] = n
+    has_loop = bool(re.search(r"\bwhile\b", txt))
+    return ops, has_loop
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sp = SPConfig(mesh=mesh, sp_axis="data")
+    B, H, S, d = 1, 8, 65536, 64
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.bfloat16) * 0.3
+    k = jax.random.normal(ks[1], (B, H, S, d), jnp.bfloat16) * 0.3
+    v = jax.random.normal(ks[2], (B, H, S, d), jnp.bfloat16) * 0.5
+
+    print(f"sequence: {S} tokens over {sp.degree} devices "
+          f"({S // sp.degree} per device)\n")
+
+    o_sp = jax.jit(lambda a, b, c: lasp2(a, b, c, sp=sp))(q, k, v)
+    o_loc = jax.jit(lambda a, b, c: lasp2(a, b, c, sp=None))(q, k, v)
+    diff = jnp.abs(o_sp.astype(jnp.float32) - o_loc.astype(jnp.float32))
+    rel = float(jnp.max(diff) / jnp.max(jnp.abs(o_loc.astype(jnp.float32))))
+    print(f"LASP-2 sharded == local: max rel Δ = {rel:.2e} "
+          f"(bf16 I/O, fp32 state)\n")
+
+    for name, fn in [
+        ("LASP-2 (AllGather of M_t)",
+         lambda a, b, c: lasp2(a, b, c, sp=sp)),
+        ("LASP-1 (ring P2P)",
+         lambda a, b, c: lasp1(a, b, c, sp=sp)),
+        ("Megatron-SP (AllGather activations)",
+         lambda a, b, c: megatron_sp_attention(a, b, c, sp=sp)),
+    ]:
+        ops, loop = collective_report(fn, q, k, v)
+        print(f"{name:40s} collectives={ops} sequential-loop={loop}")
+
+    print("\nLASP-2's gather moves H·dk·dv state bytes — independent of the"
+          "\n65536-token sequence; Megatron-SP's gather scales with S.")
+
+
+if __name__ == "__main__":
+    main()

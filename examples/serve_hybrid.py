@@ -1,0 +1,59 @@
+"""Serve a hybrid (linear + softmax attention) model with batched requests.
+
+Shows the paper's constant-memory-inference property: the linear layers'
+decode cache is a fixed (B, H, dk, dv) state regardless of how long the
+generation runs, while the (1-in-4) softmax layers keep a windowed KV
+cache.
+
+  PYTHONPATH=src python examples/serve_hybrid.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = get_smoke("linear-llama3-1b")
+    base = cfg
+    import dataclasses
+    from repro.configs.base import LayerSpec
+    dense = dataclasses.replace(base, pattern=(LayerSpec(),), n_layers=4,
+                                name="smoke-dense")
+    cfg = dense.linearize(hybrid_every=4)   # 3 linear + 1 windowed softmax
+    print("serving", cfg.name, "| pattern:",
+          [s.mixer for s in cfg.pattern])
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    engine = ServeEngine(cfg, params, max_len=256)
+
+    prompts = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+    out = engine.generate(prompts, 48, temperature=0.8, seed=1)
+    print("generated:", out.shape)
+
+    # constant-memory property: linear state size is independent of length
+    cache16 = M.init_cache(cfg, batch=4, max_len=16)
+    cache4k = M.init_cache(cfg, batch=4, max_len=4096)
+    lin16 = cache16["layers"][0]["mixer"]["m"]
+    lin4k = cache4k["layers"][0]["mixer"]["m"]
+    kv16 = cache16["layers"][3]["mixer"]["k"]
+    kv4k = cache4k["layers"][3]["mixer"]["k"]
+    print(f"linear-attn state:  max_len=16 -> {lin16.shape}, "
+          f"max_len=4096 -> {lin4k.shape}  (CONSTANT — paper's claim)")
+    print(f"softmax KV cache:   max_len=16 -> {kv16.shape}, "
+          f"max_len=4096 -> {kv4k.shape}  (grows with length)")
+    assert lin16.shape == lin4k.shape
+    assert kv16.shape != kv4k.shape
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-param Linear-Llama3 for a few hundred
+steps with checkpointing + auto-resume — the paper's §4 setup at
+laptop scale (pure linear attention; pass --hybrid for the 1/4 hybrid).
+
+  PYTHONPATH=src python examples/train_linear_llama3.py \
+      [--steps 300] [--hybrid] [--resume-demo]
+
+``--resume-demo`` kills training halfway and restarts it, demonstrating
+bitwise-deterministic checkpoint resume (fault tolerance).
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import (LayerSpec, LinearAttnConfig, ModelConfig,
+                                RunConfig)
+from repro.data.pipeline import SyntheticLM
+from repro.train.loop import train
+
+
+def model_100m(hybrid: bool) -> ModelConfig:
+    """~100M params: 12 layers, d=512, 8 heads — Linear-Llama3 recipe."""
+    pattern = (LayerSpec(mixer="linear", mlp="dense"),)
+    cfg = ModelConfig(
+        name="linear-llama3-100m", family="dense",
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=8,
+        d_ff=1408, vocab_size=32000,
+        pattern=pattern,
+        linear_attn=LinearAttnConfig(feature_map="identity", decay="none",
+                                     backward="faithful"))
+    if hybrid:
+        cfg = dataclasses.replace(
+            cfg.linearize(hybrid_every=4), name="linear-llama3-100m-h4")
+        # (linearize on an already-linear pattern keeps it linear; build
+        # the hybrid from the softmax base instead)
+        base = dataclasses.replace(cfg, pattern=(LayerSpec(),),
+                                   name="llama3-100m")
+        cfg = base.linearize(hybrid_every=4)
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--hybrid", action="store_true")
+    ap.add_argument("--resume-demo", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/linear_llama3_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_100m(args.hybrid)
+    print(f"model: {cfg.name}, {cfg.param_count()/1e6:.0f}M params")
+    run = RunConfig(num_microbatches=2, total_steps=args.steps,
+                    warmup_steps=20, learning_rate=6e-4, remat="full")
+    data = SyntheticLM(cfg.vocab_size, seq_len=512, global_batch=8, seed=0)
+
+    if args.resume_demo:
+        half = args.steps // 2
+        print(f"--- phase 1: train to step {half}, then 'crash' ---")
+        train(cfg, run, data, ckpt_dir=args.ckpt_dir, ckpt_every=25,
+              max_steps=half)
+        print("--- phase 2: restart; auto-resume from latest ckpt ---")
+
+    state, history = train(cfg, run, data, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=50)
+    first = sum(h["loss"] for h in history[:5]) / max(len(history[:5]), 1)
+    last = sum(h["loss"] for h in history[-5:]) / max(len(history[-5:]), 1)
+    print(f"\n{cfg.name}: loss {first:.3f} -> {last:.3f} over "
+          f"{len(history)} steps (final step {int(state['step'])})")
+
+
+if __name__ == "__main__":
+    main()

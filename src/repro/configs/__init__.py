@@ -1,0 +1,57 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+The 10 assigned architectures + the paper's own Linear-Llama3 variants.
+``--linearize`` variants (paper's recipe) are available for every arch via
+``get_config(arch_id, linearize=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (LayerSpec, LinearAttnConfig, MambaConfig,
+                                ModelConfig, MoEConfig, RunConfig,
+                                ShapeConfig, SHAPES)
+
+_MODULES = {
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "granite-34b": "granite_34b",
+    "starcoder2-15b": "starcoder2_15b",
+    "hymba-1.5b": "hymba_1_5b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "whisper-base": "whisper_base",
+    "linear-llama3-1b": "linear_llama3_1b",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "linear-llama3-1b"]
+ALL_IDS = list(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str, *, linearize: int | None = None) -> ModelConfig:
+    """``linearize``: None = native stack; 0 = pure linear attention;
+    k>0 = 1/k hybrid (paper's recipe, every k-th layer stays softmax with a
+    sliding window)."""
+    cfg = _module(arch_id).CONFIG
+    if linearize is not None:
+        cfg = cfg.linearize(hybrid_every=linearize)
+    return cfg
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def get_variant(arch_id: str, variant: str) -> ModelConfig:
+    """Named variants exported by a config module (e.g. HYBRID, DENSE)."""
+    return getattr(_module(arch_id), variant)

@@ -1,0 +1,263 @@
+"""Config dataclasses: model architecture, input shapes, run/parallelism.
+
+Every assigned architecture instantiates :class:`ModelConfig` in its own
+``repro/configs/<id>.py``. Shapes are global (arch-independent) and defined
+here. A "cell" = (arch × shape); the dry-run and roofline iterate cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class LinearAttnConfig:
+    """Linear-attention variant settings (paper §4 modules)."""
+
+    feature_map: str = "identity"   # identity | elu1 | silu | relu | taylor
+    decay: str = "none"             # none | retention | lightning | data
+    backward: str = "faithful"      # faithful (Alg. 3/4) | autodiff
+    block_size: int = 128
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0       # dense "shared" experts (Moonlight-style)
+    router_z_coef: float = 1e-3
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the repeating pattern.
+
+    mixer: softmax | linear | mamba2 | hymba | cross
+    mlp:   dense | moe | none
+    """
+
+    mixer: str = "softmax"
+    mlp: str = "dense"
+    sliding_window: Optional[int] = None   # softmax/hymba attention window
+    is_global: bool = True                 # hymba: full-attention layer?
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Auxiliary encoder stack (Whisper). Frontend is a stub: the model
+    consumes precomputed frame embeddings of shape (B, n_frames, d_model)."""
+
+    n_layers: int = 6
+    n_frames: int = 1500
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # layer pattern: `pattern` repeated `n_layers / len(pattern)` times.
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+
+    linear_attn: LinearAttnConfig = field(default_factory=LinearAttnConfig)
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # VLM: number of (stub) image tokens cross-attended by "cross" layers.
+    n_image_tokens: int = 0
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    mlp_act: str = "swiglu"         # swiglu | gelu (whisper)
+
+    # padded for TP divisibility / MXU alignment
+    vocab_pad_multiple: int = 128
+
+    # provenance note: [source; verified-tier]
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_layers % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"pattern length {len(self.pattern)}")
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if no layer does full (unwindowed) softmax attention over
+        the *text* sequence — the ``long_500k`` eligibility rule. Hymba's
+        three global layers are decode-time linear-per-step, so hymba
+        counts as sub-quadratic for the decode-only long shape."""
+        for s in self.pattern:
+            if s.mixer == "softmax" and s.sliding_window is None:
+                return False
+        return True
+
+    def linearize(self, hybrid_every: int = 0) -> "ModelConfig":
+        """Paper's Linear-X recipe: replace softmax mixers with linear
+        attention; ``hybrid_every=4`` keeps every 4th *softmax* layer as
+        softmax (the paper's 1/4 hybrid). Kept softmax layers get a sliding
+        window so the hybrid stays sub-quadratic for long_500k. Non-softmax
+        mixers (cross/mamba2/hymba) are preserved."""
+        unit = self.pattern
+        if hybrid_every and len(unit) == 1:
+            unit = unit * hybrid_every   # expand so every k-th can differ
+        count = 0
+        new = []
+        for spec in unit:
+            if spec.mixer != "softmax":
+                new.append(spec)
+                continue
+            count += 1
+            if hybrid_every and count % hybrid_every == 0:
+                new.append(dataclasses.replace(spec, sliding_window=2048))
+            else:
+                new.append(dataclasses.replace(spec, mixer="linear",
+                                               sliding_window=None))
+        if self.n_layers % len(new):
+            raise ValueError(
+                f"n_layers={self.n_layers} not divisible by expanded "
+                f"pattern {len(new)}")
+        suffix = f"-hybrid{hybrid_every}" if hybrid_every else "-linear"
+        return dataclasses.replace(self, name=self.name + suffix,
+                                   pattern=tuple(new))
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for sanity
+        tests against the sizes in the architecture names."""
+        d, dh = self.d_model, self.head_dim
+        n = self.padded_vocab * d  # embed
+        if not self.tie_embeddings:
+            n += self.padded_vocab * d
+        for spec in self.pattern:
+            per = 2 * d  # two norms
+            if spec.mixer in ("softmax", "linear"):
+                per += d * (self.n_heads * dh) + 2 * d * (self.n_kv_heads * dh)
+                per += (self.n_heads * dh) * d
+            elif spec.mixer == "cross":
+                per += d * (self.n_heads * dh) + 2 * d * (self.n_kv_heads * dh)
+                per += (self.n_heads * dh) * d
+            elif spec.mixer in ("mamba2", "hymba"):
+                mb = self.mamba or MambaConfig()
+                d_in = mb.expand * d if spec.mixer == "mamba2" else d
+                nh = d_in // mb.headdim
+                conv_ch = d_in + 2 * mb.ngroups * mb.d_state
+                per += d * (2 * d_in + 2 * mb.ngroups * mb.d_state + nh)
+                per += conv_ch * mb.d_conv + d_in * d + 2 * nh + d_in
+                if spec.mixer == "hymba":
+                    per += d * (self.n_heads * dh) \
+                        + 2 * d * (self.n_kv_heads * dh) \
+                        + (self.n_heads * dh) * d
+            n_mats = 2 if self.mlp_act == "gelu" else 3
+            if spec.mlp == "dense":
+                per += n_mats * d * self.d_ff
+            elif spec.mlp == "moe":
+                moe = self.moe
+                per += d * moe.num_experts  # router
+                per += moe.num_experts * 3 * d * self.d_ff
+                if moe.n_shared_experts:
+                    per += n_mats * d * self.d_ff * moe.n_shared_experts
+            n += per * self.n_groups
+        if self.encoder is not None:
+            enc_per = 2 * d + d * (self.n_heads * dh) \
+                + 2 * d * (self.n_kv_heads * dh) + (self.n_heads * dh) * d \
+                + (2 if self.mlp_act == "gelu" else 3) * d * self.d_ff
+            n += enc_per * self.encoder.n_layers
+        return n
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters — MoE counts top_k + shared experts."""
+        if self.moe is None:
+            return self.param_count()
+        moe = self.moe
+        full = self.param_count()
+        n_moe_layers = sum(1 for s in self.pattern if s.mlp == "moe") \
+            * self.n_groups
+        inactive = (moe.num_experts - moe.top_k) * 3 * self.d_model \
+            * self.d_ff * n_moe_layers
+        return full - inactive
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Per-run knobs resolved by the launcher (overridable via CLI)."""
+
+    num_microbatches: int = 1        # gradient accumulation steps
+    remat: str = "full"              # full | dots | none
+    use_pallas: Optional[bool] = None
+    learning_rate: float = 3e-4
+    min_lr: float = 1e-6             # paper §4.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1        # paper §4.1
+    grad_clip: float = 1.0           # paper §4.1
+    adam_b1: float = 0.9             # paper §4.1
+    adam_b2: float = 0.95            # paper §4.1
+    seed: int = 0
+    zero1: bool = True               # shard optimizer state over data axis
+    scan_unroll: bool = False        # unroll layer/microbatch scans (roofline cost extrapolation)
+    cast_params_once: bool = False   # §Perf: bf16-cast params once per step (halves FSDP gather traffic)
+    infer_bf16: bool = True          # inference cells hold bf16 params
+    infer_fsdp_budget_gb: float = 6.0  # drop FSDP at inference if params fit
+    banded_windows: bool = True      # §Perf: banded sliding-window attention
+    bf16_params: bool = False        # §Perf: bf16 weight storage (f32 Adam moments)
+    microbatch_tokens: int = 4096    # per-device per-microbatch token target
+    grad_compression: bool = False   # error-feedback bf16 cross-pod allreduce

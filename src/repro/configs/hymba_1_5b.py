@@ -1,0 +1,31 @@
+"""hymba-1.5b — parallel attn+mamba heads [arXiv:2411.13676; hf].
+
+Attention heads run full attention only in a few layers; all others use a
+sliding window (the arch's sub-quadratic trick). We mark globals
+*statically* in an 8-position pattern (every 8th layer: 0/8/16/24) so the
+banded sliding-window fast path applies (§Perf); Hymba's exact global
+placement (first/middle/last) is approximated — noted in DESIGN.md. (An
+XLA-CPU combiner pass mis-lowers scan bodies holding >11 of these mixers,
+so the pattern is kept at 8 positions — see EXPERIMENTS.md §Dry-run.)
+"""
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab_size=32001, head_dim=64,
+    rope_theta=10000.0, norm_eps=1e-5,
+    pattern=(LayerSpec(mixer="hymba", mlp="dense", is_global=True),)
+    + tuple(LayerSpec(mixer="hymba", mlp="dense", sliding_window=1024,
+                      is_global=False) for _ in range(7)),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=1, headdim=64, ngroups=1),
+    source="[arXiv:2411.13676; hf]",
+)
+
+SMOKE = ModelConfig(
+    name="hymba-1.5b-smoke", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
+    vocab_size=512, head_dim=16,
+    pattern=(LayerSpec(mixer="hymba", mlp="dense", sliding_window=16),),
+    mamba=MambaConfig(d_state=8, d_conv=4, expand=1, headdim=16, ngroups=1),
+)

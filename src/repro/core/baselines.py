@@ -1,0 +1,176 @@
+"""SP baselines the paper compares against (paper §4.2, Appendix A.2/A.3).
+
+* :func:`lasp1` — LASP-1 (paper Algorithms 5/6): ring-style P2P transfer of
+  the memory state, ``W-1`` sequential ``ppermute`` steps in the forward.
+* :func:`ring_attention` — Ring Attention (Liu et al. 2023): K/V blocks
+  rotate around the ring with online-softmax accumulation.
+* :func:`megatron_sp_attention` — Megatron-SP-style: all-gather the *full
+  hidden activations* along the sequence axis before attention (traffic
+  scales with sequence length — the point of comparison in paper §3.4).
+
+These exist for benchmarks (`benchmarks/fig3_speed.py`) and parity tests;
+production code uses ``repro.core.lasp2``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.lasp2 import SPConfig, _pick_block
+from repro.core.lasp2h import NEG_INF, _softmax_attend, causal_mask
+from repro.core.linear_attention import chunk_scan, chunk_summaries
+
+
+def lasp1(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
+          block_size: int = 128):
+    """LASP-1 (paper Alg. 6, decay-generalized): ring P2P state transfer.
+
+    Each rank waits for M_{t-1} from rank t-1, computes its inter output and
+    updated state, and forwards it — W-1 *sequential* communication steps.
+    We express the ring with ``ppermute`` inside a ``fori_loop``: at step s,
+    rank r holds the running prefix state of chunk r-s-1..; after W-1 steps
+    every rank has consumed all predecessors. (The sequential dependency is
+    the point — it is what LASP-2's AllGather removes.)
+    """
+    if log_a is None:
+        log_a = jnp.zeros(q.shape[:-1], dtype=jnp.float32)
+    if sp is None or sp.degree == 1:
+        return chunk_scan(q, k, v, log_a,
+                          block_size=_pick_block(q.shape[-2], block_size)).o
+
+    axis = sp.sp_axis
+    w = sp.degree
+    perm = [(i, (i + 1) % w) for i in range(w)]
+
+    def local_fn(q_, k_, v_, la_):
+        bs = _pick_block(q_.shape[-2], block_size)
+        t = jax.lax.axis_index(axis)
+        m_loc, a_loc = chunk_summaries(k_, v_, la_, block_size=bs)
+        out = chunk_scan(q_, k_, v_, la_, block_size=bs)  # intra part
+        b = jnp.exp(jnp.cumsum(la_.astype(jnp.float32), axis=-1))
+
+        # Ring: circulate (state, accumulated-decay) W-1 times. At step s the
+        # incoming packet left rank (t-1-s); accumulate it iff it belongs to
+        # a predecessor chunk (global causality), with the decay of the
+        # chunks in between already folded in by the senders.
+        def body(s, carry):
+            m_prev, send_m, send_a = carry
+            recv_m = jax.lax.ppermute(send_m, axis, perm)
+            recv_a = jax.lax.ppermute(send_a, axis, perm)
+            src = t - 1 - s                       # chunk id of the payload
+            use = (src >= 0)
+            m_prev = jnp.where(use, m_prev + recv_m, m_prev)
+            # fold my chunk's decay into the payload before forwarding: the
+            # payload decays through every chunk it passes.
+            fwd_m = recv_m * jnp.exp(a_loc)[..., None, None]
+            fwd_a = recv_a + a_loc
+            return (m_prev, fwd_m, fwd_a)
+
+        m0 = jnp.zeros_like(m_loc)
+        # initial packet: my state decayed by nothing yet
+        m_prev, _, _ = jax.lax.fori_loop(
+            0, w - 1, body, (m0, m_loc, a_loc))
+        o_inter = jnp.einsum("...sk,...kv->...sv",
+                             q_.astype(jnp.float32) * b[..., None], m_prev)
+        return (out.o.astype(jnp.float32) + o_inter).astype(q_.dtype)
+
+    spec = P(None, None, axis, None)
+    aspec = P(None, None, axis)
+    return jax.shard_map(local_fn, mesh=sp.mesh,
+                         in_specs=(spec, spec, spec, aspec), out_specs=spec,
+                         axis_names={axis}, check_vma=False)(q, k, v, log_a)
+
+
+def ring_attention(q, k, v, *, sp: Optional[SPConfig] = None,
+                   causal: bool = True, scale: Optional[float] = None):
+    """Ring Attention: rotate K/V chunks with online-softmax accumulation."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if sp is None or sp.degree == 1:
+        mask = causal_mask(q.shape[-2], k.shape[-2], 0)[None, None] if causal \
+            else None
+        return _softmax_attend(q, k, v, scale=scale, mask=mask)
+
+    axis = sp.sp_axis
+    w = sp.degree
+    # send chunk to the next rank; after step s we hold chunk (t - s) mod W
+    perm = [(i, (i + 1) % w) for i in range(w)]
+
+    def local_fn(q_, k_, v_):
+        b, hq, c, dh = q_.shape
+        hkv = k_.shape[1]
+        rep = hq // hkv
+        t = jax.lax.axis_index(axis)
+        qf = q_.astype(jnp.float32)
+
+        def attend_block(kc, vc, src):
+            kf = jnp.repeat(kc, rep, axis=1).astype(jnp.float32)
+            vf = jnp.repeat(vc, rep, axis=1).astype(jnp.float32)
+            s = jnp.einsum("bhsd,bhtd->bhst", qf, kf) * scale
+            if causal:
+                qpos = t * c + jnp.arange(c)[:, None]
+                kpos = src * c + jnp.arange(c)[None, :]
+                s = jnp.where((qpos >= kpos)[None, None], s, NEG_INF)
+            return s, vf
+
+        def body(step, carry):
+            o, m, l, kc, vc = carry
+            src = (t - step) % w
+            s, vf = attend_block(kc, vc, src)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            o = o * corr[..., None] + jnp.einsum("bhst,bhtd->bhsd", p, vf)
+            kc = jax.lax.ppermute(kc, axis, perm)
+            vc = jax.lax.ppermute(vc, axis, perm)
+            return (o, m_new, l, kc, vc)
+
+        o0 = jnp.zeros((b, hq, c, dh), jnp.float32)
+        m0 = jnp.full((b, hq, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, c), jnp.float32)
+        o, m, l, _, _ = jax.lax.fori_loop(0, w, body, (o0, m0, l0, k_, v_))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o.astype(q_.dtype)
+
+    spec = P(None, None, axis, None)
+    return jax.shard_map(local_fn, mesh=sp.mesh,
+                         in_specs=(spec, spec, spec), out_specs=spec,
+                         axis_names={axis}, check_vma=False)(q, k, v)
+
+
+def megatron_sp_attention(q, k, v, *, sp: Optional[SPConfig] = None,
+                          causal: bool = True, scale: Optional[float] = None):
+    """Megatron-SP-style: all-gather *everything* along the sequence axis.
+
+    Traffic per layer is O(S·d) (vs LASP-2's O(d²)) — the unfavourable
+    scaling the paper quantifies in §3.4. Only used for comparisons.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if sp is None or sp.degree == 1:
+        mask = causal_mask(q.shape[-2], k.shape[-2], 0)[None, None] if causal \
+            else None
+        return _softmax_attend(q, k, v, scale=scale, mask=mask)
+
+    axis = sp.sp_axis
+
+    def local_fn(q_, k_, v_):
+        c = q_.shape[-2]
+        t = jax.lax.axis_index(axis)
+        qg = jax.lax.all_gather(q_, axis, axis=2, tiled=True)
+        kg = jax.lax.all_gather(k_, axis, axis=2, tiled=True)
+        vg = jax.lax.all_gather(v_, axis, axis=2, tiled=True)
+        s_tot = qg.shape[2]
+        mask = causal_mask(s_tot, s_tot, 0)[None, None] if causal else None
+        o = _softmax_attend(qg, kg, vg, scale=scale, mask=mask)
+        return jax.lax.dynamic_slice_in_dim(o, t * c, c, axis=2)
+
+    spec = P(None, None, axis, None)
+    return jax.shard_map(local_fn, mesh=sp.mesh,
+                         in_specs=(spec, spec, spec), out_specs=spec,
+                         axis_names={axis}, check_vma=False)(q, k, v)

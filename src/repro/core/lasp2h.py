@@ -1,0 +1,361 @@
+"""LASP-2H: the standard-attention half of hybrid-model sequence parallelism.
+
+Paper §3.5 + Algorithm 7: for softmax-attention layers, LASP-2H uses
+AllGather-based context parallelism (the Llama-3 recipe) instead of ring
+P2P — K_t and V_t chunks are gathered across the SP group, then each device
+computes attention for its local Q_t chunk. With GQA the gathered K/V are
+much smaller than Q, so the all-gather is cheap relative to the attention
+FLOPs (paper's argument).
+
+This module also provides the *decode-time* counterpart we need at scale
+(beyond-paper, flash-decoding style): when the KV cache's sequence dim is
+sharded over a mesh axis, each shard computes a partial online-softmax
+attention and the partials are merged with a tiny gather of per-shard
+``(m, l, o)`` statistics.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.lasp2 import SPConfig
+
+NEG_INF = -1e30
+
+
+def _softmax_attend(q, k, v, *, bias=None, scale, mask=None):
+    """Plain fp32-softmax attention on local tensors.
+
+    q: (B, Hq, Sq, dh); k,v: (B, Hkv, Sk, dh). GQA via head repeat.
+    mask: broadcastable to (B, 1|Hq, Sq, Sk), True = attend.
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        scores = scores + bias
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def causal_mask(sq, sk, q_offset, *, sliding_window: Optional[int] = None,
+                segment_q=None, segment_k=None):
+    """(sq, sk) boolean mask. Query global position = q_offset + row index."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = qpos >= kpos
+    if sliding_window is not None:
+        m &= (qpos - kpos) < sliding_window
+    mask = m  # (sq, sk)
+    if segment_q is not None:
+        seg = segment_q[:, None] == segment_k[None, :]
+        mask = mask & seg
+    return mask
+
+
+def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
+                                causal: bool = True,
+                                sliding_window: Optional[int] = None,
+                                scale: Optional[float] = None):
+    """Paper Algorithm 7: AllGather-based context parallelism.
+
+    q: (B, Hq, S, dh), k/v: (B, Hkv, S, dh) — S is the global sequence and
+    may be sharded over ``sp.sp_axis``. One forward all-gather each for K and
+    V (sizes C×d per chunk — small under GQA); backward (via autodiff) emits
+    the mirrored reduce-scatter on dK/dV, matching Megatron's AG/RS pairing
+    shown in paper Fig. 2.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+
+    if sp is None or sp.degree == 1:
+        mask = None
+        if causal:
+            mask = causal_mask(q.shape[-2], k.shape[-2], 0,
+                               sliding_window=sliding_window)[None, None]
+        return _softmax_attend(q, k, v, scale=scale, mask=mask)
+
+    axis = sp.sp_axis
+    w = sp.degree
+
+    def local_fn(q_, k_, v_):
+        # q_: (B, Hq, C, dh); k_/v_: (B, Hkv, C, dh) local chunks.
+        c = q_.shape[-2]
+        t = jax.lax.axis_index(axis)
+        # Alg. 7 line 5: gather K/V chunks; tiled=True concatenates along a
+        # new leading dim which we fold into the sequence dim (line 6).
+        kg = jax.lax.all_gather(k_, axis, axis=2, tiled=True)  # (B,Hkv,S,dh)
+        vg = jax.lax.all_gather(v_, axis, axis=2, tiled=True)
+        mask = None
+        if causal:
+            mask = causal_mask(c, w * c, t * c,
+                               sliding_window=sliding_window)[None, None]
+        return _softmax_attend(q_, kg, vg, scale=scale, mask=mask)
+
+    spec = P(None, None, axis, None)
+    return jax.shard_map(local_fn, mesh=sp.mesh,
+                         in_specs=(spec, spec, spec), out_specs=spec,
+                         axis_names={axis}, check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Banded sliding-window attention (beyond-paper perf: §Perf hillclimb #3).
+# ---------------------------------------------------------------------------
+
+def banded_attention(q, k, v, window: int, *, scale=None, q_offset=0,
+                     has_prefix: bool = False):
+    """Causal sliding-window attention computing only the diagonal band.
+
+    Instead of materializing (S, S) scores and masking (the naive path —
+    O(S²) memory/FLOPs regardless of window), queries are blocked by
+    ``window`` and each block attends only its own + previous K block:
+    O(S·2w) scores. q: (B,Hq,Sq,dh).
+
+    ``has_prefix``: K/V carry one extra leading window block (the halo
+    from the previous SP rank); otherwise a synthetic zero block is
+    prepended and masked out. ``q_offset`` may be a traced scalar (the SP
+    rank offset). Requires Sq % window == 0.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    w = window
+    assert sq % w == 0, (sq, w)
+    rep = hq // hkv
+    kf = jnp.repeat(k, rep, axis=1) if rep > 1 else k
+    vf = jnp.repeat(v, rep, axis=1) if rep > 1 else v
+    if not has_prefix:   # synthetic previous block so every q block has 2
+        zpad = jnp.zeros((b, hq, w, dh), kf.dtype)
+        kf = jnp.concatenate([zpad, kf], axis=2)
+        vf = jnp.concatenate([zpad, vf], axis=2)
+    nb = sq // w
+    qb = q.reshape(b, hq, nb, w, dh)
+    kb = kf.reshape(b, hq, nb + 1, w, dh)
+    vb = vf.reshape(b, hq, nb + 1, w, dh)
+    kcat = jnp.concatenate([kb[:, :, :-1], kb[:, :, 1:]], axis=3)
+    vcat = jnp.concatenate([vb[:, :, :-1], vb[:, :, 1:]], axis=3)
+    s = jnp.einsum("bhnqd,bhnkd->bhnqk", qb.astype(jnp.float32),
+                   kcat.astype(jnp.float32)) * scale      # (B,H,nb,w,2w)
+    qpos = (q_offset + jnp.arange(nb)[:, None, None] * w
+            + jnp.arange(w)[None, :, None])               # (nb,w,1)
+    # K always starts one window block before q (real halo or zero pad)
+    kpos = (q_offset - w + jnp.arange(nb)[:, None, None] * w
+            + jnp.arange(2 * w)[None, None, :])           # (nb,1,2w)
+    # positions before the real K start (synthetic zero pad, or the
+    # non-existent halo on rank 0) are invalid, not just "score 0"
+    min_kpos = q_offset if not has_prefix else 0
+    mask = (qpos >= kpos) & ((qpos - kpos) < w) & (kpos >= min_kpos)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnqk,bhnkd->bhnqd", p, vcat.astype(jnp.float32))
+    return o.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def banded_attention_chunked(q, k, v, window: int, n_chunks: int, *,
+                             scale=None):
+    """Banded sliding-window attention, SP-communication-optimal global
+    form (§Perf hillclimb #3, iteration 3).
+
+    The sequence is viewed as ``n_chunks`` shard-aligned chunks (set
+    ``n_chunks = SP degree``); each chunk's halo (the previous chunk's
+    last ``window`` tokens) is obtained with ONE small shifted-slice on
+    the chunk axis — the only cross-shard communication, O(w·d) per chunk.
+    The sub-diagonal block pairing *inside* each chunk uses shifted slices
+    on an UNSHARDED block axis (free). This avoids both (a) GSPMD
+    permuting the full K/V for a global block shift (measured 160 GB/step
+    on hymba×prefill) and (b) partial-manual ``ppermute``, which XLA-CPU
+    cannot partition.
+
+    Requires S % n_chunks == 0 and (S / n_chunks) % window == 0.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    w, nc = window, n_chunks
+    c = sq // nc
+    assert sq % nc == 0 and c % w == 0, (sq, nc, w)
+    nb = c // w
+    rep = hq // hkv
+
+    kc = k.reshape(b, hkv, nc, c, dh)
+    vc = v.reshape(b, hkv, nc, c, dh)
+    # halo: previous chunk's last window — the ONLY cross-chunk traffic
+    halo_k = jnp.concatenate(
+        [jnp.zeros((b, hkv, 1, w, dh), k.dtype), kc[:, :, :-1, -w:]], axis=2)
+    halo_v = jnp.concatenate(
+        [jnp.zeros((b, hkv, 1, w, dh), v.dtype), vc[:, :, :-1, -w:]], axis=2)
+    k_ext = jnp.concatenate([halo_k, kc], axis=3)   # (B,Hkv,nc,c+w,dh)
+    v_ext = jnp.concatenate([halo_v, vc], axis=3)
+    if rep > 1:
+        k_ext = jnp.repeat(k_ext, rep, axis=1)
+        v_ext = jnp.repeat(v_ext, rep, axis=1)
+
+    q5 = q.reshape(b, hq, nc, nb, w, dh)
+    k5 = k_ext.reshape(b, hq, nc, nb + 1, w, dh)
+    v5 = v_ext.reshape(b, hq, nc, nb + 1, w, dh)
+    kcat = jnp.concatenate([k5[:, :, :, :-1], k5[:, :, :, 1:]], axis=4)
+    vcat = jnp.concatenate([v5[:, :, :, :-1], v5[:, :, :, 1:]], axis=4)
+    s = jnp.einsum("bhcnqd,bhcnkd->bhcnqk", q5.astype(jnp.float32),
+                   kcat.astype(jnp.float32)) * scale  # (B,H,nc,nb,w,2w)
+    qpos = (jnp.arange(nc)[:, None, None, None] * c
+            + jnp.arange(nb)[None, :, None, None] * w
+            + jnp.arange(w)[None, None, :, None])     # (nc,nb,w,1)
+    kpos = (jnp.arange(nc)[:, None, None, None] * c - w
+            + jnp.arange(nb)[None, :, None, None] * w
+            + jnp.arange(2 * w)[None, None, None, :])  # (nc,nb,1,2w)
+    mask = (qpos >= kpos) & ((qpos - kpos) < w) & (kpos >= 0)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhcnqk,bhcnkd->bhcnqd", p, vcat.astype(jnp.float32))
+    return o.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def windowed_context_attention(q, k, v, window: int, *,
+                               sp: Optional[SPConfig] = None, scale=None,
+                               halo_mode: Optional[str] = None):
+    """Sliding-window attention under sequence parallelism via a halo
+    exchange of the previous rank's last ``window`` K/V tokens — replaces
+    the full AllGather-CP for windowed layers (traffic O(w·d) instead of
+    O(S·d), and banded local compute).
+
+    halo_mode:
+      "ppermute" — one collective_permute (optimal; the TPU path).
+      "gather"   — all_gather of the halos + dynamic index (W× the halo
+        traffic — still ≪ full CP). Default off-TPU: XLA-CPU cannot
+        partition ppermute under partial-manual shard_map (PartitionId
+        error), so the dry-run measures this variant; EXPERIMENTS §Perf
+        reports the TPU ppermute figure analytically alongside.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if sp is None or sp.degree == 1:
+        return banded_attention(q, k, v, window, scale=scale)
+    if halo_mode is None:
+        halo_mode = "ppermute" if jax.default_backend() == "tpu" \
+            else "gather"
+
+    axis = sp.sp_axis
+    w_ranks = sp.degree
+    perm = [(i, (i + 1) % w_ranks) for i in range(w_ranks)]
+
+    def local_fn(q_, k_, v_):
+        c = q_.shape[2]
+        t = jax.lax.axis_index(axis)
+        # rank 0's halo refers to positions < 0 under the band mask
+        # (min_kpos), so whatever arrives there never attends.
+        if halo_mode == "ppermute":
+            halo_k = jax.lax.ppermute(k_[:, :, -window:], axis, perm)
+            halo_v = jax.lax.ppermute(v_[:, :, -window:], axis, perm)
+        else:
+            hk = jax.lax.all_gather(k_[:, :, -window:], axis)  # (W,...)
+            hv = jax.lax.all_gather(v_[:, :, -window:], axis)
+            prev = jnp.maximum(t - 1, 0)
+            halo_k = jax.lax.dynamic_index_in_dim(hk, prev, 0,
+                                                  keepdims=False)
+            halo_v = jax.lax.dynamic_index_in_dim(hv, prev, 0,
+                                                  keepdims=False)
+        kx = jnp.concatenate([halo_k, k_], axis=2)
+        vx = jnp.concatenate([halo_v, v_], axis=2)
+        return banded_attention(q_, kx, vx, window, scale=scale,
+                                q_offset=t * c, has_prefix=True)
+
+    spec = P(None, None, axis, None)
+    return jax.shard_map(local_fn, mesh=sp.mesh,
+                         in_specs=(spec, spec, spec), out_specs=spec,
+                         axis_names={axis}, check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Sharded decode attention (flash-decoding style; beyond-paper).
+# ---------------------------------------------------------------------------
+
+def sharded_decode_attention(q, k_cache, v_cache, cache_len, *,
+                             sp: Optional[SPConfig] = None,
+                             scale: Optional[float] = None,
+                             sliding_window=None):
+    """One-token attention against a long KV cache whose seq dim is sharded.
+
+    q: (B, Hq, 1, dh); k_cache/v_cache: (B, Hkv, S, dh) with S sharded over
+    ``sp.sp_axis`` (typically the "model" axis when kv_heads < TP degree).
+    cache_len: scalar — number of valid cache positions (<= S).
+
+    Each shard computes a partial online-softmax over its cache slice, then
+    the per-shard (max, sum, weighted-value) triplets are merged — a gather
+    of O(B·Hq·dh) bytes, independent of S.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+
+    def partial_attend(q_, k_, v_, valid):
+        # returns (o_unnorm (B,Hq,dh) f32, m (B,Hq), l (B,Hq))
+        b, hq, _, dh = q_.shape
+        hkv = k_.shape[1]
+        rep = hq // hkv
+        kf = jnp.repeat(k_, rep, axis=1).astype(jnp.float32)
+        vf = jnp.repeat(v_, rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhd,bhtd->bht", q_[:, :, 0].astype(jnp.float32),
+                       kf) * scale
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        # guard: fully-masked shard -> zero weight, m = NEG_INF
+        p = jnp.where(valid[:, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bht,bhtd->bhd", p, vf)
+        return o, m, l
+
+    if sp is None or sp.degree == 1:
+        s_tot = k_cache.shape[2]
+        kpos = jnp.arange(s_tot)[None, :]
+        valid = kpos < cache_len
+        if sliding_window is not None:
+            valid &= (cache_len - 1 - kpos) < sliding_window
+        valid = jnp.broadcast_to(valid, (q.shape[0], s_tot))
+        o, m, l = partial_attend(q, k_cache, v_cache, valid)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o[:, :, None, :].astype(q.dtype)
+
+    axis = sp.sp_axis
+    w = sp.degree
+
+    def local_fn(q_, k_, v_, cache_len_):
+        c = k_.shape[2]
+        t = jax.lax.axis_index(axis)
+        pos = t * c + jnp.arange(c)
+        valid = pos[None, :] < cache_len_
+        if sliding_window is not None:
+            valid &= (cache_len_ - 1 - pos[None, :]) < sliding_window
+        valid = jnp.broadcast_to(valid, (q_.shape[0], c))
+        o, m, l = partial_attend(q_, k_, v_, valid)
+        # Merge partials: gather (o, m, l) across shards — O(B*Hq*dh)·W bytes.
+        og = jax.lax.all_gather(o, axis)   # (W, B, Hq, dh)
+        mg = jax.lax.all_gather(m, axis)   # (W, B, Hq)
+        lg = jax.lax.all_gather(l, axis)
+        m_glob = jnp.max(mg, axis=0)
+        corr = jnp.exp(mg - m_glob[None])
+        l_glob = jnp.sum(lg * corr, axis=0)
+        o_glob = jnp.sum(og * corr[..., None], axis=0)
+        o_final = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return o_final[:, :, None, :].astype(q_.dtype)
+
+    qspec = P(None, None, None, None)           # q replicated over sp axis
+    kvspec = P(None, None, axis, None)          # cache seq sharded
+    cache_len = jnp.asarray(cache_len)
+    return jax.shard_map(
+        local_fn, mesh=sp.mesh, in_specs=(qspec, kvspec, kvspec, P()),
+        out_specs=qspec, axis_names={axis}, check_vma=False)(
+            q, k_cache, v_cache, cache_len)

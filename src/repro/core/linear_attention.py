@@ -1,0 +1,255 @@
+"""Core linear-attention math: oracles and chunked (block-scan) forms.
+
+Everything here is *local* (single device) math. The SP layers in
+``repro.core.lasp2`` compose these primitives with collectives.
+
+Conventions
+-----------
+* Shapes: ``q, k: (..., S, dk)``, ``v: (..., S, dv)``; leading dims are
+  batch/heads and are vmapped/broadcast.
+* ``log_a: (..., S)`` is the per-token log-decay (``log a_s``, ``a_s in (0, 1]``,
+  so ``log_a <= 0``). ``log_a = 0`` everywhere recovers basic linear attention
+  (paper Eq. 3/4). A value of ``-inf`` (we use a large negative number) resets
+  the state — used for document packing (paper §A.4.2).
+* The recurrence (decay-generalized paper Eq. 4):
+
+      M_s = a_s * M_{s-1} + k_s^T v_s,        o_s = q_s M_s
+
+* All state/decay math is fp32; inputs may be bf16.
+
+Numerical stability: within a block of length C we form cumulative log decays
+``cb_i = sum_{j<=i} log_a_j`` (inclusive). All reweighting factors used are
+``exp(cb_i - cb_j)`` with ``i >= j`` or ``exp(sum - cb_i)``, which are <= 1
+because ``log_a <= 0`` — no overflow, fp32 throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Stand-in for log(0) used by document-boundary state resets. Must be large
+# enough that exp(RESET_LOG_A) underflows any realistic state magnitude
+# (exp(-60) ~ 1e-26) but small enough that fp32 cumulative sums containing a
+# handful of resets keep full relative precision (eps(60R) << 1 for R resets
+# per block). -1e9 would be wrong: it wipes out all neighbouring log-decay
+# information through catastrophic cancellation in the cumsum.
+RESET_LOG_A = -60.0
+
+
+class ChunkOutputs(NamedTuple):
+    """Outputs of a chunked linear-attention pass over a local sequence."""
+
+    o: jax.Array          # (..., S, dv) attention output
+    state: jax.Array      # (..., dk, dv) final memory state (fp32)
+    log_decay: jax.Array  # (...,) total log decay across the sequence (fp32)
+
+
+# ---------------------------------------------------------------------------
+# Oracles (sequential scan) — ground truth for tests.
+# ---------------------------------------------------------------------------
+
+def sequential_oracle(q, k, v, log_a=None, initial_state=None, causal=True):
+    """Token-by-token recurrence; ground truth. O(S) scan, fp32.
+
+    With ``causal=False`` computes the bidirectional (no-mask) form:
+    ``o_s = q_s M_{1:S}`` (paper Alg. 1 semantics).
+    """
+    *lead, S, dk = q.shape
+    dv = v.shape[-1]
+    if log_a is None:
+        log_a = jnp.zeros((*lead, S), dtype=jnp.float32)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    laf = log_a.astype(jnp.float32)
+    s0 = (jnp.zeros((*lead, dk, dv), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(m, inp):
+        qs, ks, vs, la = inp  # (..., dk), (..., dk), (..., dv), (...,)
+        a = jnp.exp(la)[..., None, None]
+        m = a * m + ks[..., :, None] * vs[..., None, :]
+        o = jnp.einsum("...k,...kv->...v", qs, m)
+        return m, o
+
+    xs = (jnp.moveaxis(qf, -2, 0), jnp.moveaxis(kf, -2, 0),
+          jnp.moveaxis(vf, -2, 0), jnp.moveaxis(laf, -1, 0))
+    m_final, o = jax.lax.scan(step, s0, xs)
+    o = jnp.moveaxis(o, 0, -2)
+    if not causal:
+        # Bidirectional: every position reads the full-sequence state.
+        o = jnp.einsum("...sk,...kv->...sv", qf, m_final)
+    total_log_a = jnp.sum(laf, axis=-1)
+    return ChunkOutputs(o.astype(q.dtype), m_final, total_log_a)
+
+
+# ---------------------------------------------------------------------------
+# Block-local (intra-chunk) primitives.
+# ---------------------------------------------------------------------------
+
+def _block_terms(q, k, v, log_a):
+    """Per-block quantities, fp32. Block length C is the last-but-one dim.
+
+    Returns (in fp32):
+      o_intra: (..., C, dv)  masked intra-block output (zero initial state)
+      m_blk:   (..., dk, dv) end-of-block state contribution
+                             ``sum_i exp(cb_C - cb_i) k_i^T v_i``
+      b:       (..., C)      inclusive cumulative decay ``exp(cb_i)``
+      a_blk:   (...,)        total block log decay ``cb_C``
+    """
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    laf = log_a.astype(jnp.float32)
+    cb = jnp.cumsum(laf, axis=-1)                      # (..., C) inclusive
+    a_blk = cb[..., -1]
+    # D_ij = exp(cb_i - cb_j) for i >= j else 0  (i: query pos, j: key pos)
+    diff = cb[..., :, None] - cb[..., None, :]
+    mask = jnp.tril(jnp.ones(diff.shape[-2:], bool))
+    decay_mat = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = jnp.einsum("...ik,...jk->...ij", qf, kf) * decay_mat
+    o_intra = jnp.einsum("...ij,...jv->...iv", scores, vf)
+    # State contribution decayed to block end: weight exp(cb_C - cb_i) <= 1.
+    w = jnp.exp(a_blk[..., None] - cb)                 # (..., C)
+    m_blk = jnp.einsum("...ck,...cv->...kv", kf * w[..., None], vf)
+    return o_intra, m_blk, jnp.exp(cb), a_blk
+
+
+def block_summary(k, v, log_a):
+    """State contribution + total log decay of a block (no output).
+
+    Cheaper than ``_block_terms`` — skips the intra-block score matrix.
+    """
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    cb = jnp.cumsum(log_a.astype(jnp.float32), axis=-1)
+    a_blk = cb[..., -1]
+    w = jnp.exp(a_blk[..., None] - cb)                 # <= 1
+    m_blk = jnp.einsum("...ck,...cv->...kv", kf * w[..., None], vf)
+    return m_blk, a_blk
+
+
+def _split_blocks(x, nb, block_size, *, seq_axis_is_last=False):
+    """(..., S, d) -> (nb, ..., C, d)  or  (..., S) -> (nb, ..., C)."""
+    if seq_axis_is_last:
+        x = x.reshape(*x.shape[:-1], nb, block_size)
+        return jnp.moveaxis(x, -2, 0)
+    x = x.reshape(*x.shape[:-2], nb, block_size, x.shape[-1])
+    return jnp.moveaxis(x, -3, 0)
+
+
+def chunk_scan(q, k, v, log_a=None, *, initial_state=None, block_size=128):
+    """Chunked causal linear attention over a local sequence (XLA path).
+
+    Splits S into blocks of ``block_size``; scans over blocks carrying the
+    fp32 memory state. Equivalent to ``sequential_oracle`` but runs on MXU
+    friendly matmuls. This is the lightning-attention-2-style local form the
+    Pallas kernel (``repro.kernels.lasp2_chunk``) mirrors.
+    """
+    *lead, S, dk = q.shape
+    dv = v.shape[-1]
+    if log_a is None:
+        log_a = jnp.zeros((*lead, S), dtype=jnp.float32)
+    if S % block_size:
+        raise ValueError(f"S={S} not divisible by block_size={block_size}")
+    nb = S // block_size
+    s0 = (jnp.zeros((*lead, dk, dv), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def body(carry, xs):
+        m, ld = carry  # running state (fp32), running log decay
+        qb, kb, vb, lab = xs
+        o_intra, m_blk, b, a_blk = _block_terms(qb, kb, vb, lab)
+        o = o_intra + jnp.einsum(
+            "...ck,...kv->...cv", qb.astype(jnp.float32) * b[..., None], m)
+        m = jnp.exp(a_blk)[..., None, None] * m + m_blk
+        return (m, ld + a_blk), o
+
+    # (nb, ..., C, d)
+    xs = (_split_blocks(q, nb, block_size),
+          _split_blocks(k, nb, block_size),
+          _split_blocks(v, nb, block_size),
+          _split_blocks(log_a.astype(jnp.float32), nb, block_size,
+                        seq_axis_is_last=True))
+    (m, ld), o_blocks = jax.lax.scan(body, (s0, jnp.zeros(tuple(lead), jnp.float32)), xs)
+    o = jnp.moveaxis(o_blocks, 0, -3)  # (..., nb, C, dv)
+    o = o.reshape(*o.shape[:-3], S, dv)
+    return ChunkOutputs(o.astype(q.dtype), m, ld)
+
+
+def chunk_summaries(k, v, log_a=None, *, block_size=128):
+    """(M_local, A_local) of a local sequence without computing outputs.
+
+    Used by the LASP-2 forward to produce the tensors that get AllGathered
+    *before/concurrently with* the intra-chunk output computation (paper
+    Alg. 2 lines 6–7; the overlap opportunity).
+    """
+    *lead, S, dk = k.shape
+    dv = v.shape[-1]
+    if log_a is None:
+        log_a = jnp.zeros((*lead, S), dtype=jnp.float32)
+    nb = S // block_size
+
+    def body(carry, xs):
+        m, ld = carry
+        kb, vb, lab = xs
+        m_blk, a_blk = block_summary(kb, vb, lab)
+        m = jnp.exp(a_blk)[..., None, None] * m + m_blk
+        return (m, ld + a_blk), None
+
+    xs = (_split_blocks(k, nb, block_size),
+          _split_blocks(v, nb, block_size),
+          _split_blocks(log_a.astype(jnp.float32), nb, block_size,
+                        seq_axis_is_last=True))
+    s0 = (jnp.zeros((*lead, dk, dv), jnp.float32),
+          jnp.zeros(tuple(lead), jnp.float32))
+    (m, ld), _ = jax.lax.scan(body, s0, xs)
+    return m, ld
+
+
+# ---------------------------------------------------------------------------
+# Feature maps (paper §4: basic / Lightning / Retention / GLA / Based).
+# ---------------------------------------------------------------------------
+
+def feature_map(x, kind: str):
+    """Kernel feature maps applied to q and k before the linear recurrence."""
+    if kind in ("identity", "none"):
+        return x
+    if kind == "elu1":         # Katharopoulos et al. basic linear attention
+        return jax.nn.elu(x) + 1.0
+    if kind == "silu":         # Lightning attention
+        return jax.nn.silu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "taylor":       # Based: 1 + x + x^2/sqrt(2) second-order terms
+        d = x.shape[-1]
+        x2 = jnp.einsum("...i,...j->...ij", x, x) / jnp.sqrt(2.0)
+        x2 = x2.reshape(*x.shape[:-1], d * d)
+        ones = jnp.ones((*x.shape[:-1], 1), x.dtype)
+        return jnp.concatenate([ones, x, x2], axis=-1)
+    raise ValueError(f"unknown feature map {kind!r}")
+
+
+def decay_log_a(kind: str, *, heads: int, s: int, gate=None, dtype=jnp.float32):
+    """Per-token log decays ``(heads, s)`` for the supported variants.
+
+    kind:
+      "none"      — basic linear attention (log a = 0)
+      "retention" — RetNet fixed per-head decay 1 - 2^{-5-h}
+      "lightning" — Lightning/TransNormer fixed per-head slope (ALiBi-like)
+      "data"      — data-dependent (caller passes ``gate`` = log a directly,
+                    e.g. from a learned projection; GLA-lite / Mamba-2 SSD)
+    """
+    if kind == "none":
+        return jnp.zeros((heads, s), dtype)
+    if kind == "retention":
+        a = 1.0 - jnp.exp2(-5.0 - jnp.arange(heads, dtype=jnp.float32))
+        return jnp.broadcast_to(jnp.log(a)[:, None], (heads, s)).astype(dtype)
+    if kind == "lightning":
+        slope = jnp.exp2(-8.0 * (jnp.arange(heads, dtype=jnp.float32) + 1) / heads)
+        return jnp.broadcast_to(-slope[:, None], (heads, s)).astype(dtype)
+    if kind == "data":
+        assert gate is not None, "data-dependent decay needs a gate"
+        return gate
+    raise ValueError(f"unknown decay kind {kind!r}")

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLM, doc_segments  # noqa: F401

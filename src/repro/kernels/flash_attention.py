@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) GQA attention.
+
+Used by the standard-attention layers of hybrid models (LASP-2H's local
+compute after the K/V AllGather — paper Alg. 7 line 7) and by prefill.
+
+Grid = ``(B, Hq, nq, nkv)``; the kv axis is the innermost sequential axis;
+``(m, l, acc)`` live in VMEM scratch and are reset when ``ik == 0``. Causal
+blocks strictly above the diagonal are skipped with ``pl.when`` (their HBM
+tiles are still fetched by the pipeline — acceptable; the hillclimb notes
+discuss trimming the grid). GQA is expressed in the K/V index maps
+(``hq // rep``), so KV tiles are fetched once per q-head group member
+without materializing repeated heads in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, sliding_window, nkv: int,
+            block_q: int, block_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Causality at block granularity: skip blocks entirely above the diagonal
+    # (and, with a sliding window, blocks entirely below it).
+    needed = True
+    if causal:
+        needed = jnp.asarray(k_start <= q_start + block_q - 1)
+    if sliding_window is not None:
+        lo_ok = (q_start - (k_start + block_k - 1)) < sliding_window
+        needed = jnp.logical_and(needed, lo_ok)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)       # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if sliding_window is not None:
+            mask &= (qpos - kpos) < sliding_window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, 0] = l_scr[:, 0] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sliding_window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window=None,
+                    scale=None, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+    """GQA flash attention (forward). q: (B,Hq,S,dh), k/v: (B,Hkv,Sk,dh)."""
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"sq={sq}, sk={sk} not divisible by blocks "
+                         f"({block_q}, {block_k})")
+    nq, nkv = sq // block_q, sk // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, sliding_window=sliding_window,
+        nkv=nkv, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h, iq, ik, rep_=rep: (b_, h // rep_, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b_, h, iq, ik, rep_=rep: (b_, h // rep_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+        name="flash_attention_fwd",
+    )(q, k, v)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: intra-chunk decayed causal linear attention.
+
+This is the compute hot-spot of LASP-2 (paper Alg. 2 lines 5–8): each
+device's local sequence chunk is processed block-by-block, carrying the
+``dk × dv`` memory state in VMEM scratch across the (sequential) block grid
+dimension. The cross-device part (the AllGather of chunk states) lives in
+``repro.core.lasp2``; this kernel is the per-device "intra" workhorse it
+overlaps with.
+
+TPU adaptation of the paper's Triton kernel:
+
+* blocks are ``(BLOCK, dk/dv)`` tiles, MXU-aligned (128 lanes); the three
+  matmuls per block (``QK^T``, ``scores·V``, ``K^T V``) hit the MXU with
+  fp32 accumulation via ``preferred_element_type``;
+* the memory state is fp32 in VMEM *scratch* that persists across the
+  sequential grid axis — the HBM↔VMEM traffic per block is just the
+  q/k/v/o tiles (the GPU version instead re-materializes through SMEM);
+* decay math is log-space fp32; all reweighting factors are <= 1
+  (see ``repro.core.linear_attention``).
+
+Layout: inputs are flattened to ``(BH, S, d)``; grid = ``(BH, S//BLOCK)``
+with ``dimension_semantics=("parallel", "arbitrary")`` so distinct
+batch·head programs parallelize across cores while blocks run in order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, la_ref, o_ref, state_ref, ld_ref,
+            state_scratch, ld_scratch, *, nblocks: int):
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        state_scratch[...] = jnp.zeros_like(state_scratch)
+        ld_scratch[...] = jnp.zeros_like(ld_scratch)
+
+    q = q_ref[0].astype(jnp.float32)          # (C, dk)
+    k = k_ref[0].astype(jnp.float32)          # (C, dk)
+    v = v_ref[0].astype(jnp.float32)          # (C, dv)
+    la = la_ref[0].astype(jnp.float32)        # (C,)
+
+    cb = jnp.cumsum(la)                       # inclusive cumulative log decay
+    a_blk = cb[-1]
+    c = q.shape[0]
+    # D_ij = exp(cb_i - cb_j) for i >= j else 0 — all factors <= 1.
+    diff = cb[:, None] - cb[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    dmat = jnp.where(row >= col, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * dmat            # (C, C)
+    o_intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (C, dv)
+    # inter (within-device, previous blocks): (q ⊙ b) @ S_carry
+    state = state_scratch[...]
+    o_inter = jax.lax.dot_general(
+        q * jnp.exp(cb)[:, None], state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0] = (o_intra + o_inter).astype(o_ref.dtype)
+
+    # state update: S <- exp(A) S + (k ⊙ exp(A - cb))^T v
+    kw = k * jnp.exp(a_blk - cb)[:, None]
+    s_new = jnp.exp(a_blk) * state + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state_scratch[...] = s_new
+    ld_scratch[0, 0] = ld_scratch[0, 0] + a_blk
+
+    @pl.when(blk == nblocks - 1)
+    def _finalize():
+        state_ref[0] = s_new
+        ld_ref[0, 0] = ld_scratch[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def lasp2_chunk_fwd(q, k, v, log_a, *, block_size: int = DEFAULT_BLOCK,
+                    interpret: bool = False):
+    """Chunked decayed causal linear attention (forward), Pallas TPU.
+
+    q, k: (BH, S, dk); v: (BH, S, dv); log_a: (BH, S).
+    Returns (o (BH, S, dv), state (BH, dk, dv) fp32, log_decay (BH,) fp32).
+    """
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    if s % block_size:
+        raise ValueError(f"S={s} must be divisible by block={block_size}")
+    nb = s // block_size
+
+    grid = (bh, nb)
+    kernel = functools.partial(_kernel, nblocks=nb)
+    o, state, ld = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_size, dk), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, block_size, dk), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, block_size, dv), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, block_size), lambda b, t: (b, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_size, dv), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bh, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="lasp2_chunk_fwd",
+    )(q, k, v, log_a)
+    return o, state, ld[:, 0]

@@ -1,0 +1,76 @@
+"""Backend dispatch for the perf-critical ops.
+
+Model code calls these wrappers; on TPU the Pallas kernels run, elsewhere
+(this CPU container, the dry-run) the mathematically-identical XLA path
+from ``repro.core`` runs. ``backend="interpret"`` forces Pallas interpret
+mode (used by tests). The dispatch is deliberately value-free: same
+signatures, same semantics, sub-1e-3 numerical agreement enforced by
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear_attention import chunk_scan
+from repro.core.lasp2h import _softmax_attend, causal_mask
+from repro.kernels import flash_attention as _flash
+from repro.kernels import lasp2_chunk as _chunk
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def linear_attention_op(q, k, v, log_a=None, *, block_size: int = 128,
+                        backend: Optional[str] = None):
+    """Local chunked decayed causal linear attention.
+
+    q, k: (B, H, S, dk); v: (B, H, S, dv); log_a: (B, H, S) or None.
+    Returns (o, state (B,H,dk,dv) fp32, log_decay (B,H) fp32).
+    """
+    backend = backend or default_backend()
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if log_a is None:
+        log_a = jnp.zeros((b, h, s), jnp.float32)
+    if backend in ("pallas", "interpret"):
+        qf = q.reshape(b * h, s, dk)
+        kf = k.reshape(b * h, s, dk)
+        vf = v.reshape(b * h, s, dv)
+        laf = log_a.reshape(b * h, s)
+        o, st, ld = _chunk.lasp2_chunk_fwd(
+            qf, kf, vf, laf, block_size=min(block_size, s),
+            interpret=(backend == "interpret"))
+        return (o.reshape(b, h, s, dv), st.reshape(b, h, dk, dv),
+                ld.reshape(b, h))
+    out = chunk_scan(q, k, v, log_a, block_size=min(block_size, s))
+    return out.o, out.state, out.log_decay
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True, sliding_window=None,
+                       scale=None, backend: Optional[str] = None,
+                       block_q: int = 128, block_k: int = 128):
+    """GQA softmax attention. q: (B,Hq,S,dh); k/v: (B,Hkv,Sk,dh)."""
+    backend = backend or default_backend()
+    if isinstance(sliding_window, jax.core.Tracer):
+        backend = "xla"   # dynamic window (hymba stacked layers) → XLA path
+    if backend in ("pallas", "interpret"):
+        sq, sk = q.shape[2], k.shape[2]
+        if sq % min(block_q, sq) == 0 and sk % min(block_k, sk) == 0:
+            return _flash.flash_attention(
+                q, k, v, causal=causal, sliding_window=sliding_window,
+                scale=scale, block_q=block_q, block_k=block_k,
+                interpret=(backend == "interpret"))
+        # fall through for awkward shapes
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    mask = None
+    if causal or sliding_window is not None:
+        mask = causal_mask(q.shape[2], k.shape[2],
+                           q_offset=k.shape[2] - q.shape[2],
+                           sliding_window=sliding_window)[None, None]
+    return _softmax_attend(q, k, v, scale=scale, mask=mask)

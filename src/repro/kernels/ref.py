@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+These are *independent* re-derivations (no shared code with the kernels'
+internals beyond jnp), used by the per-kernel allclose sweeps in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_attention_ref(q, k, v, log_a=None):
+    """Decayed causal linear attention, O(S²) direct form. fp32 math.
+
+    q, k: (BH, S, dk); v: (BH, S, dv); log_a: (BH, S) or None.
+    Returns (o (BH, S, dv), final_state (BH, dk, dv) fp32).
+    """
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    if log_a is None:
+        log_a = jnp.zeros((bh, s), jnp.float32)
+    cb = jnp.cumsum(log_a.astype(jnp.float32), axis=-1)
+    diff = cb[:, :, None] - cb[:, None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    d = jnp.where(mask[None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = jnp.einsum("bik,bjk->bij", qf, kf) * d
+    o = jnp.einsum("bij,bjv->biv", scores, vf)
+    w = jnp.exp(cb[:, -1:] - cb)                      # decay i -> end
+    state = jnp.einsum("bsk,bsv->bkv", kf * w[..., None], vf)
+    return o.astype(q.dtype), state
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sliding_window=None,
+                        scale=None):
+    """GQA softmax attention, direct form. q: (B,Hq,S,dh), k/v: (B,Hkv,S,dh)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf) * scale
+    if causal or sliding_window is not None:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(k.shape[2])[None, :]
+        m = jnp.ones_like(s, bool)
+        if causal:
+            m &= (qpos >= kpos)[None, None]
+        if sliding_window is not None:
+            m &= ((qpos - kpos) < sliding_window)[None, None]
+        s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bhtd->bhsd", p, vf)
+    return o.astype(q.dtype)

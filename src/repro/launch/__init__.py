@@ -1,0 +1,2 @@
+# launch: mesh/dryrun/train/serve/roofline entry points (import lazily
+# — dryrun must set XLA_FLAGS before jax init).

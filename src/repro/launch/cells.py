@@ -1,0 +1,294 @@
+"""Cell builder: (architecture × input shape × mesh) → jit-able step fn +
+abstract inputs + shardings. Shared by the dry-run, the roofline pass and
+the scalability benchmark.
+
+A *cell* resolves to one of three step functions:
+  train   → ``train_step(state, batch)``  (fwd+bwd+optimizer, grad accum)
+  prefill → ``prefill(params, tokens, ...)``
+  decode  → ``decode_step(params, token, cache, ...)``
+
+``long_500k`` on a non-sub-quadratic arch automatically switches to the
+paper's linearized 1/4-hybrid variant (windowed softmax layers) — the
+substitution is recorded in the cell metadata (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, RunConfig, SHAPES, ShapeConfig
+from repro.models import model as M
+from repro.sharding.rules import (Parallelism, fit_spec, make_plan,
+                                  param_specs)
+from repro.train.step import init_state, make_train_step
+
+MICROBATCH_TOKEN_TARGET = 4096   # per-device per-microbatch tokens
+
+
+def choose_microbatches(shape: ShapeConfig, dp_size: int,
+                        target: int = MICROBATCH_TOKEN_TARGET) -> int:
+    tokens_per_dev = shape.global_batch * shape.seq_len // max(dp_size, 1)
+    a = max(1, tokens_per_dev // target)
+    a = min(a, shape.global_batch // max(dp_size, 1) or 1)
+    while shape.global_batch % a:
+        a -= 1
+    return max(a, 1)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def aux_input_specs(cfg: ModelConfig, batch_rows: int, lead=()):
+    """Stub-frontend inputs (ShapeDtypeStructs): whisper frames / vlm patches."""
+    out = {}
+    if cfg.encoder is not None:
+        out["frames"] = _sds(lead + (batch_rows, cfg.encoder.n_frames,
+                                     cfg.d_model), jnp.bfloat16)
+    if cfg.n_image_tokens:
+        out["img"] = _sds(lead + (batch_rows, cfg.n_image_tokens,
+                                  cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _batch_sharding_tree(batch_tree, plan: Parallelism, *, lead_micro: bool):
+    """Shardings for a batch dict. Dims: ([A], B, S or extra...)."""
+    mesh = plan.mesh
+    b_ax = plan.rules.get("batch")
+    s_ax = plan.rules.get("seq")
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dims = [None] * len(leaf.shape)
+        i = 1 if lead_micro else 0
+        dims[i] = b_ax
+        if name in ("tokens", "labels", "resets") and len(leaf.shape) > i + 1:
+            dims[i + 1] = s_ax
+        return fit_spec(mesh, leaf.shape, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _named(mesh, spec_for(p, l)), batch_tree)
+
+
+def cache_specs(cache_tree, plan: Parallelism):
+    """PartitionSpecs for a decode cache (leading dim = layer groups)."""
+    mesh = plan.mesh
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "pos":
+            return P()
+        b_ax = plan.rules.get("batch")
+        if name in ("k", "v"):
+            return fit_spec(mesh, leaf.shape,
+                            P(None, b_ax, plan.rules.get("kv_heads"),
+                              plan.rules.get("cache_seq"), None))
+        if name == "m":
+            return fit_spec(mesh, leaf.shape,
+                            P(None, b_ax, plan.rules.get("heads"),
+                              None, None))
+        if name.startswith("conv_"):
+            return fit_spec(mesh, leaf.shape,
+                            P(None, b_ax, None, plan.tp_axis))
+        return fit_spec(mesh, leaf.shape, P(None, b_ax))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    plan: Parallelism
+    run: RunConfig
+    fn: Any                  # jit-able callable
+    abstract_args: tuple     # ShapeDtypeStructs matching fn
+    in_shardings: tuple
+    donate: tuple
+    note: str = ""
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         donate_argnums=self.donate)
+        return jitted.lower(*self.abstract_args)
+
+
+def resolve_config(arch: str, shape_name: str) -> tuple[ModelConfig, str]:
+    cfg = get_config(arch)
+    note = "native"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        # paper's recipe: linearize (1/4 hybrid, windowed softmax) — pure
+        # full attention cannot run 500k (DESIGN.md §5).
+        cfg = cfg.linearize(hybrid_every=4)
+        note = "linearized-1/4-hybrid (pure softmax infeasible at 500k)"
+    return cfg, note
+
+
+def build_cell(arch: str, shape_name: str, mesh: Optional[Mesh], *,
+               run: Optional[RunConfig] = None,
+               cfg_override: Optional[ModelConfig] = None,
+               backend: Optional[str] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    if cfg_override is not None:
+        cfg, note = cfg_override, "override"
+    else:
+        cfg, note = resolve_config(arch, shape_name)
+    run = run or RunConfig()
+    plan = make_plan(mesh, shape.kind, global_batch=shape.global_batch,
+                     n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
+                     params_bytes=cfg.param_count() * 2, backend=backend)
+    plan.banded_windows = run.banded_windows
+
+    if shape.kind == "train":
+        dp = 1
+        if mesh is not None:
+            dp = int(np.prod([mesh.shape[a] for a in plan.dp_axes
+                              if a in mesh.axis_names]))
+            if plan.sp is not None:   # SP-mode training: batch on pod only
+                dp = mesh.shape.get("pod", 1)
+        a = choose_microbatches(shape, dp, target=run.microbatch_tokens)
+        run = dataclasses.replace(run, num_microbatches=a)
+        bm = shape.global_batch // a
+        state_shapes = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), cfg, run))
+        batch = {"tokens": _sds((a, bm, shape.seq_len), jnp.int32),
+                 "labels": _sds((a, bm, shape.seq_len), jnp.int32),
+                 "resets": _sds((a, bm, shape.seq_len), jnp.bool_)}
+        batch.update(aux_input_specs(cfg, bm, lead=(a,)))
+        fn = make_train_step(cfg, run, plan)
+        if mesh is None:
+            return Cell(arch, shape, cfg, plan, run, fn,
+                        (state_shapes, batch), None, (0,), note)
+        sspec = _state_shardings(state_shapes, plan)
+        bspec = _batch_sharding_tree(batch, plan, lead_micro=True)
+        return Cell(arch, shape, cfg, plan, run, fn,
+                    (state_shapes, batch), (sspec, bspec), (0,), note)
+
+    params_shapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    if run.infer_bf16:
+        # §Perf: inference holds bf16 weights (no fp32 masters to gather)
+        params_shapes = jax.tree.map(
+            lambda l: _sds(l.shape, jnp.bfloat16)
+            if (l.dtype == jnp.float32 and len(l.shape) >= 2) else l,
+            params_shapes)
+    if mesh is not None and run.infer_bf16 and shape.kind == "prefill":
+        # §Perf: drop FSDP for PREFILL when the TP-sharded weights fit —
+        # kills the per-layer weight all-gather (measured -96 GB/step on
+        # moonshot×prefill_32k). Decode keeps FSDP: its per-step gather is
+        # tiny and resident weights would blow the HBM budget (measured
+        # +14 GiB peak on phi3.5 decode).
+        total_b = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree.leaves(params_shapes))
+        tp_size = mesh.shape.get("model", 1)
+        if total_b / tp_size <= run.infer_fsdp_budget_gb * 2 ** 30:
+            plan.fsdp_axis = None
+    pspec = None
+    if mesh is not None:
+        pspec = jax.tree.map(lambda s: _named(mesh, s),
+                             param_specs(params_shapes, plan),
+                             is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        b = shape.global_batch
+        tokens = _sds((b, shape.seq_len), jnp.int32)
+        aux = aux_input_specs(cfg, b)
+
+        def fn(params, tokens, aux_in):
+            logits, cache = M.prefill(
+                params, tokens, cfg, plan, max_len=shape.seq_len,
+                img_emb=aux_in.get("img"),
+                enc_frames=aux_in.get("frames"),
+                unroll=run.scan_unroll)
+            return logits, cache
+
+        if mesh is None:
+            return Cell(arch, shape, cfg, plan, run, fn,
+                        (params_shapes, tokens, aux), None, (), note)
+        tspec = _named(mesh, fit_spec(mesh, tokens.shape,
+                                      P(plan.rules.get("batch"),
+                                        plan.rules.get("seq"))))
+        aspec = jax.tree.map(
+            lambda l: _named(mesh, fit_spec(
+                mesh, l.shape, P(plan.rules.get("batch"), None, None))),
+            aux)
+        return Cell(arch, shape, cfg, plan, run, fn,
+                    (params_shapes, tokens, aux),
+                    (pspec, tspec, aspec), (), note)
+
+    # decode
+    b = shape.global_batch
+    token = _sds((b,), jnp.int32)
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, shape.seq_len))
+    aux = {}
+    if cfg.encoder is not None:
+        aux["enc_out"] = _sds((b, cfg.encoder.n_frames, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.n_image_tokens:
+        aux["img"] = _sds((b, cfg.n_image_tokens, cfg.d_model),
+                          jnp.bfloat16)
+
+    def fn(params, token, cache, aux_in):
+        return M.decode_step(params, token, cache, cfg, plan,
+                             img_emb=aux_in.get("img"),
+                             enc_out=aux_in.get("enc_out"),
+                             unroll=run.scan_unroll)
+
+    if mesh is None:
+        return Cell(arch, shape, cfg, plan, run, fn,
+                    (params_shapes, token, cache_shapes, aux), None, (2,),
+                    note)
+    tokspec = _named(mesh, fit_spec(mesh, token.shape,
+                                    P(plan.rules.get("batch"))))
+    cspec = jax.tree.map(lambda s: _named(mesh, s),
+                         cache_specs(cache_shapes, plan),
+                         is_leaf=lambda x: isinstance(x, P))
+    aspec = jax.tree.map(
+        lambda l: _named(mesh, fit_spec(
+            mesh, l.shape, P(plan.rules.get("batch"), None, None))), aux)
+    return Cell(arch, shape, cfg, plan, run, fn,
+                (params_shapes, token, cache_shapes, aux),
+                (pspec, tokspec, cspec, aspec), (2,), note)
+
+
+def _state_shardings(state_shapes, plan: Parallelism):
+    mesh = plan.mesh
+    pspec = jax.tree.map(lambda s: _named(mesh, s),
+                         param_specs(state_shapes["params"], plan),
+                         is_leaf=lambda x: isinstance(x, P))
+    out = {"params": pspec,
+           "opt": type(state_shapes["opt"])(
+               m=jax.tree.map(lambda s: _named(mesh, s),
+                              param_specs(state_shapes["opt"].m, plan),
+                              is_leaf=lambda x: isinstance(x, P)),
+               v=jax.tree.map(lambda s: _named(mesh, s),
+                              param_specs(state_shapes["opt"].v, plan),
+                              is_leaf=lambda x: isinstance(x, P)),
+               count=_named(mesh, P())),
+           "step": _named(mesh, P())}
+    if "err" in state_shapes:
+        out["err"] = jax.tree.map(lambda s: _named(mesh, s),
+                                  param_specs(state_shapes["err"], plan),
+                                  is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def reduced_depth_config(cfg: ModelConfig, n_units: int) -> ModelConfig:
+    """Same widths, ``n_units`` pattern repetitions — used by the roofline
+    cost extrapolation (cost is exactly linear in group count)."""
+    return dataclasses.replace(
+        cfg, n_layers=len(cfg.pattern) * n_units)

@@ -1,0 +1,192 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``cost_analysis()`` supplies per-device HLO FLOPs/bytes, but counts each
+``while`` body (scan) ONCE — verified empirically. The roofline therefore
+extrapolates from reduced-depth *unrolled* lowers (see
+``repro.launch.roofline``); this module handles the per-compile parsing.
+
+Collective bytes are not in ``cost_analysis`` at all: we parse the
+compiled (post-SPMD) HLO text and apply the standard ring-cost model per
+op (paper §3.4's communication model, generalized):
+
+  all-gather        (g-1)/g × result_bytes
+  reduce-scatter    (g-1)   × result_bytes          (input = g × result)
+  all-reduce        2(g-1)/g × bytes
+  all-to-all        (g-1)/g × bytes
+  collective-permute  result_bytes
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Sum bytes over every `dtype[shape]` group in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+@dataclass
+class Collective:
+    op: str
+    result_bytes: int
+    group_size: int
+    count: int = 1
+
+    @property
+    def traffic_bytes(self) -> float:
+        g = max(self.group_size, 2)
+        b = self.result_bytes
+        if self.op == "all-gather":
+            t = (g - 1) / g * b
+        elif self.op == "all-reduce":
+            t = 2 * (g - 1) / g * b
+        elif self.op == "reduce-scatter":
+            t = (g - 1) * b
+        elif self.op == "all-to-all":
+            t = (g - 1) / g * b
+        else:  # collective-permute
+            t = b
+        return t * self.count
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> List[Collective]:
+    """All collective ops in the compiled module ('-start' variants counted,
+    '-done' skipped). NOTE: ops inside while bodies appear once — callers
+    using scans must extrapolate (repro.launch.roofline)."""
+    out = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(",
+                     stripped)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        base = op.replace("-start", "")
+        if base not in _COLL_OPS or op.endswith("-done"):
+            continue
+        rb = _type_bytes(type_str)
+        if base == "all-gather" and op.endswith("-start"):
+            rb //= 2   # start ops carry (operand, result) tuple types
+        out.append(Collective(base, rb, _group_size(stripped,
+                                                    total_devices)))
+    return out
+
+
+def collective_summary(colls: List[Collective]) -> Dict[str, float]:
+    summary: Dict[str, float] = {}
+    for c in colls:
+        summary[c.op] = summary.get(c.op, 0.0) + c.traffic_bytes
+        summary[f"{c.op}_count"] = summary.get(f"{c.op}_count", 0) + c.count
+    summary["total_bytes"] = sum(c.traffic_bytes for c in colls)
+    return summary
+
+
+@dataclass
+class CostVector:
+    """Per-device cost of one compiled program (additive, scalable)."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = field(default_factory=dict)
+
+    def __add__(self, o):
+        d = dict(self.coll_by_op)
+        for k, v in o.coll_by_op.items():
+            d[k] = d.get(k, 0.0) + v
+        return CostVector(self.flops + o.flops,
+                          self.hbm_bytes + o.hbm_bytes,
+                          self.coll_bytes + o.coll_bytes, d)
+
+    def __sub__(self, o):
+        d = {k: v - o.coll_by_op.get(k, 0.0)
+             for k, v in self.coll_by_op.items()}
+        return CostVector(self.flops - o.flops,
+                          self.hbm_bytes - o.hbm_bytes,
+                          self.coll_bytes - o.coll_bytes, d)
+
+    def scale(self, f):
+        return CostVector(self.flops * f, self.hbm_bytes * f,
+                          self.coll_bytes * f,
+                          {k: v * f for k, v in self.coll_by_op.items()})
+
+
+def measure(compiled, total_devices: int) -> CostVector:
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text(), total_devices)
+    summ = collective_summary(colls)
+    by_op = {c: summ.get(c, 0.0) for c in _COLL_OPS if c in summ}
+    return CostVector(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(summ.get("total_bytes", 0.0)),
+        coll_by_op=by_op)
+
+
+def roofline_terms(cost: CostVector) -> Dict[str, float]:
+    """The three per-step time lower bounds, in seconds (per chip; FLOPs
+    and bytes here are already per-device post-SPMD)."""
+    t_compute = cost.flops / PEAK_FLOPS
+    t_memory = cost.hbm_bytes / HBM_BW
+    t_coll = cost.coll_bytes / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant}
+
+
+def memory_report(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "generated_code_bytes": ma.generated_code_size_in_bytes,
+        "peak_bytes": (ma.argument_size_in_bytes
+                       + ma.output_size_in_bytes
+                       + ma.temp_size_in_bytes
+                       - ma.alias_size_in_bytes),
+    }

@@ -1,0 +1,109 @@
+"""Primitive layers (pure functions over param dicts).
+
+Parameter naming matters: ``repro.sharding.rules`` assigns partition specs
+by the leaf names used here (wq/wk/wv/wo column/row-parallel, w1/w3/w2 for
+MLPs, table/lm_head for embeddings, ...).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    return normal(key, (d_in, d_out), scale, dtype)
+
+
+# --- norms -----------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# --- rotary ----------------------------------------------------------------
+
+def rope(x, positions, theta=10000.0):
+    """x: (B, H, S, dh); positions: (S,) or (B, S) global token positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+        ang = ang[None, None]                        # (1,1,S,half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        ang = ang[:, None]                           # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return xr.astype(x.dtype)
+
+
+# --- MLPs ------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff, act="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": dense_init(k1, d, d_ff), "w2": dense_init(k2, d_ff, d)}
+    if act == "swiglu":
+        p["w3"] = dense_init(k3, d, d_ff)
+    return p
+
+
+def mlp_apply(params, x, plan, act="swiglu"):
+    dt = x.dtype
+    h = x @ params["w1"].astype(dt)
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ params["w3"].astype(dt))
+    else:
+        h = jax.nn.gelu(h)
+    h = plan.act(h, "batch", "seq", "ff")
+    return h @ params["w2"].astype(dt)
+
+
+# --- embeddings ------------------------------------------------------------
+
+def embed_init(key, vocab, d, tie=False):
+    k1, k2 = jax.random.split(key)
+    p = {"table": normal(k1, (vocab, d), 0.02)}
+    if not tie:
+        p["lm_head"] = normal(k2, (vocab, d), 0.02)
+    return p
+
+
+def embed_lookup(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def logits_out(params, x, plan, vocab_size):
+    table = params.get("lm_head", params["table"])
+    logits = x @ table.astype(x.dtype).T
+    logits = plan.act(logits, "batch", "seq", "vocab")
+    # mask padded vocab rows
+    pad = logits.shape[-1] - vocab_size
+    if pad:
+        neg = jnp.full((pad,), -1e30, logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    return logits
+
+
+def sinusoidal_positions(n, d):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return pe

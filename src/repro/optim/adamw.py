@@ -1,0 +1,87 @@
+"""AdamW + cosine schedule, pure JAX (no optax in this container).
+
+Paper hyperparameters (§4.1): Adam β1=0.9, β2=0.95, weight decay 0.1,
+grad clip 1.0, cosine schedule with linear warmup to min_lr=1e-6.
+
+ZeRO-1 note: with FSDP parameter sharding over the "data" axis, the m/v
+moments inherit the parameter shardings, which *is* optimizer-state
+sharding — no separate machinery needed.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    m: object
+    v: object
+    count: jax.Array
+
+
+def init(params) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(m=jax.tree.map(zeros, params),
+                     v=jax.tree.map(zeros, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _decayable(path) -> bool:
+    """Weight decay applies to matrices, not norms/biases/scalars."""
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return name not in ("scale", "bias", "bq", "bk", "bv", "gate",
+                        "dt_bias", "a_log", "d_skip")
+
+
+def update(grads, state: AdamState, params, *, lr, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1):
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * gf
+        v_ = b2 * v + (1 - b2) * gf * gf
+        step_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        if weight_decay and _decayable(path):
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+        p_ = p.astype(jnp.float32) - lr * step_
+        return p_.astype(p.dtype), m_, v_
+
+    flat = jax.tree_util.tree_map_with_path(upd, params, grads,
+                                            state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(new_m, new_v, count)
+
+
+def cosine_schedule(step, *, base_lr, warmup_steps, total_steps,
+                    min_lr=1e-6):
+    sf = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.float32(step)
+    warm = base_lr * sf / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((sf - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(sf < warmup_steps, warm, cos)

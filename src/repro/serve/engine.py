@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill once, decode with cached state.
+
+For linear-attention / SSM layers the "cache" is the constant-size memory
+state M (the paper's constant-memory-inference property); for softmax
+layers it is a real KV cache, optionally sharded (flash-decoding) per the
+plan. Greedy and temperature sampling; per-row stop handling.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.sharding.rules import Parallelism, local_plan
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 plan: Optional[Parallelism] = None, max_len: int = 2048):
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan or local_plan()
+        self.max_len = max_len
+
+        def _prefill(params_, tokens, img_emb, enc_frames):
+            return M.prefill(params_, tokens, cfg, self.plan,
+                             max_len=max_len, img_emb=img_emb,
+                             enc_frames=enc_frames)
+
+        def _decode(params_, tok, cache, img_emb, enc_out):
+            return M.decode_step(params_, tok, cache, cfg, self.plan,
+                                 img_emb=img_emb, enc_out=enc_out)
+
+        self._prefill = jax.jit(_prefill, static_argnames=())
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._encode = jax.jit(
+            lambda p, f: M.encode(p, f, cfg, self.plan)) \
+            if cfg.encoder is not None else None
+
+    def generate(self, prompts, max_new_tokens: int, *, temperature=0.0,
+                 seed: int = 0, img_emb=None, enc_frames=None,
+                 eos_id: Optional[int] = None):
+        """prompts: (B, S) int32 (right-aligned, no padding support needed
+        for the synthetic benches). Returns (B, max_new_tokens) int32."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s = prompts.shape
+        if s + max_new_tokens > self.max_len:
+            raise ValueError("max_len too small")
+        enc_out = None
+        if enc_frames is not None and self._encode is not None:
+            enc_out = self._encode(self.params, enc_frames)
+        logits, cache = self._prefill(self.params, prompts, img_emb,
+                                      enc_frames)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        done = np.zeros((b,), bool)
+        tok = self._sample(logits, temperature, key)
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            if eos_id is not None:
+                done |= (out[-1] == eos_id)
+                if done.all():
+                    out.extend([out[-1]] * (max_new_tokens - i - 1))
+                    break
+            logits, cache = self._decode(self.params, tok, cache, img_emb,
+                                         enc_out)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+        return np.stack(out[:max_new_tokens], axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)

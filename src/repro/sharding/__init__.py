@@ -1,0 +1,4 @@
+from repro.sharding.rules import (Parallelism, fit_spec, make_plan,
+                                  param_specs)
+
+__all__ = ["Parallelism", "fit_spec", "make_plan", "param_specs"]

@@ -1,0 +1,2 @@
+from repro.train.step import init_state, make_train_step  # noqa: F401
+from repro.train.loop import train  # noqa: F401

@@ -1,0 +1,101 @@
+"""Fault-tolerant training loop.
+
+* auto-resume from the latest checkpoint (determinism: batch(step) is a
+  pure function, so resumed runs are bitwise-identical),
+* periodic async checkpointing (atomic; crash-safe),
+* step watchdog: wall-time per step is tracked, slow steps logged — the
+  single-host analogue of straggler detection; on a real cluster the same
+  hook triggers the coordinator's unhealthy-host path,
+* non-finite gradient steps are skipped inside the jitted step,
+* SIGTERM/KeyboardInterrupt → final checkpoint, clean exit (preemption).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.sharding.rules import Parallelism
+from repro.train.step import init_state, make_train_step
+
+
+class StepWatchdog:
+    """Tracks step durations; flags stragglers (> factor × median)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.times, self.factor, self.window = [], factor, window
+        self.slow_steps = 0
+
+    def record(self, dt: float) -> bool:
+        self.times.append(dt)
+        self.times = self.times[-self.window:]
+        med = float(np.median(self.times))
+        slow = len(self.times) >= 10 and dt > self.factor * med
+        self.slow_steps += int(slow)
+        return slow
+
+
+def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
+          plan: Optional[Parallelism] = None, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, log_every: int = 10,
+          log_fn: Callable[[str], None] = print, max_steps=None):
+    """Returns (final_state, history list of metric dicts)."""
+    plan = plan or Parallelism()
+    key = jax.random.PRNGKey(run.seed)
+    state = init_state(key, cfg, run)
+    start_step = 0
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr is not None:
+        latest = mgr.latest_step()
+        if latest is not None:
+            state = mgr.restore(latest, state)
+            start_step = latest
+            log_fn(f"[resume] restored step {latest} from {ckpt_dir}")
+
+    step_fn = jax.jit(make_train_step(cfg, run, plan), donate_argnums=(0,))
+    watchdog = StepWatchdog()
+    history = []
+    total = max_steps if max_steps is not None else run.total_steps
+
+    stop = {"now": False}
+
+    def _sig(_sig, _frm):
+        stop["now"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, _sig)
+    try:
+        for step in range(start_step, total):
+            batch = data.microbatched(step, run.num_microbatches)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics["step"], metrics["dt"] = step, dt
+            history.append(metrics)
+            if watchdog.record(dt):
+                log_fn(f"[watchdog] step {step} straggled: {dt:.2f}s")
+            if step % log_every == 0:
+                log_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
+                       f"gnorm {metrics['grad_norm']:.2f} "
+                       f"lr {metrics['lr']:.2e} {dt*1e3:.0f}ms")
+            if mgr is not None and (step + 1) % ckpt_every == 0:
+                mgr.save_async(step + 1, state)
+            if stop["now"]:
+                log_fn(f"[signal] interrupted at step {step}; saving")
+                break
+    except KeyboardInterrupt:
+        log_fn("[interrupt] saving final checkpoint")
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+        if mgr is not None:
+            mgr.wait()
+            mgr.save(int(state["step"]), state)
+    return state, history

@@ -1,0 +1,15 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# default single device. Multi-device tests run in subprocesses
+# (tests/test_distributed.py) and the dry-run sets its own 512-device flag.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,283 @@
+"""Distributed-correctness battery, run on 8 virtual host devices.
+
+Invoked by tests/test_distributed.py in a subprocess (so the main pytest
+process keeps its single default device — the dry-run is the only place
+with 512). Each check compares a sharded computation against its
+single-device oracle. Exits non-zero on the first failure.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import linear_attention as la               # noqa: E402
+from repro.core.baselines import (lasp1, megatron_sp_attention,  # noqa: E402
+                                  ring_attention)
+from repro.core.lasp2 import SPConfig, lasp2, lasp2_with_state  # noqa: E402
+from repro.core.lasp2h import (allgather_context_attention,  # noqa: E402
+                               sharded_decode_attention)
+from repro.launch.mesh import make_test_mesh                 # noqa: E402
+
+PASSED = []
+
+
+def check(name):
+    def deco(fn):
+        fn()
+        PASSED.append(name)
+        print(f"  ✓ {name}", flush=True)
+    return deco
+
+
+mesh1d = jax.make_mesh((8,), ("data",),
+                       axis_types=(jax.sharding.AxisType.Auto,))
+sp = SPConfig(mesh=mesh1d, sp_axis="data")
+key = jax.random.PRNGKey(1)
+B, H, S, dk, dv = 2, 4, 512, 32, 64
+ks = jax.random.split(key, 4)
+q = jax.random.normal(ks[0], (B, H, S, dk)) * 0.3
+k = jax.random.normal(ks[1], (B, H, S, dk)) * 0.3
+v = jax.random.normal(ks[2], (B, H, S, dv)) * 0.5
+log_a = -jnp.abs(jax.random.normal(ks[3], (B, H, S))) * 0.03
+
+
+@check("lasp2 forward parity (decay + no-decay, both backwards)")
+def _():
+    for la_in in (jnp.zeros((B, H, S)), log_a):
+        ref = la.sequential_oracle(q, k, v, la_in)
+        for bwd in ("faithful", "autodiff"):
+            o = jax.jit(lambda a, b, c, d, bwd=bwd: lasp2(
+                a, b, c, d, sp=sp, backward=bwd))(q, k, v, la_in)
+            np.testing.assert_allclose(o, ref.o, rtol=3e-4, atol=3e-4)
+
+
+@check("lasp2 custom_vjp (Alg.3/4) grads == autodiff == oracle")
+def _():
+    def gradf(fn):
+        return jax.jit(jax.grad(
+            lambda q_, k_, v_: jnp.sum(jnp.sin(fn(q_, k_, v_))),
+            argnums=(0, 1, 2)))
+    g_or = gradf(lambda a, b, c: la.sequential_oracle(a, b, c, log_a).o)(
+        q, k, v)
+    g_f = gradf(lambda a, b, c: lasp2(a, b, c, log_a, sp=sp,
+                                      backward="faithful"))(q, k, v)
+    g_a = gradf(lambda a, b, c: lasp2(a, b, c, log_a, sp=sp,
+                                      backward="autodiff"))(q, k, v)
+    for go, gf, ga in zip(g_or, g_f, g_a):
+        np.testing.assert_allclose(gf, go, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(ga, go, rtol=1e-3, atol=1e-3)
+
+
+@check("lasp2 data-dependent decay gradient (autodiff path)")
+def _():
+    g1 = jax.jit(jax.grad(lambda a: jnp.sum(jnp.sin(
+        lasp2(q, k, v, a, sp=sp, backward="autodiff")))))(log_a)
+    g2 = jax.jit(jax.grad(lambda a: jnp.sum(jnp.sin(
+        la.sequential_oracle(q, k, v, a).o))))(log_a)
+    np.testing.assert_allclose(g1, g2, rtol=2e-3, atol=2e-3)
+
+
+@check("lasp2 bidirectional (Alg.1/3) fwd+bwd vs oracle")
+def _():
+    ref = la.sequential_oracle(q, k, v, None, causal=False)
+    o = jax.jit(lambda a, b, c: lasp2(a, b, c, sp=sp, causal=False))(q, k, v)
+    np.testing.assert_allclose(o, ref.o, rtol=3e-4, atol=3e-4)
+    gn = jax.jit(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+        lasp2(a, b, c, sp=sp, causal=False))), argnums=(0, 1, 2)))(q, k, v)
+    go = jax.jit(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+        la.sequential_oracle(a, b, c, None, causal=False).o)),
+        argnums=(0, 1, 2)))(q, k, v)
+    for a_, b_ in zip(gn, go):
+        np.testing.assert_allclose(a_, b_, rtol=1e-3, atol=1e-3)
+
+
+@check("lasp2_with_state: SP prefill state == oracle final state")
+def _():
+    ref = la.sequential_oracle(q, k, v, log_a)
+    o, st = jax.jit(lambda a, b, c, d: lasp2_with_state(
+        a, b, c, d, sp=sp))(q, k, v, log_a)
+    np.testing.assert_allclose(o, ref.o, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(st, ref.state, rtol=3e-4, atol=3e-4)
+
+
+@check("LASP-1 ring (Alg.5/6) == LASP-2 == oracle")
+def _():
+    ref = la.sequential_oracle(q, k, v, log_a)
+    o = jax.jit(lambda a, b, c, d: lasp1(a, b, c, d, sp=sp))(q, k, v, log_a)
+    np.testing.assert_allclose(o, ref.o, rtol=3e-4, atol=3e-4)
+
+
+@check("lasp2 exactly ONE fwd AllGather of M_t (+1 decay gather)")
+def _():
+    import re
+    txt = jax.jit(lambda a, b, c, d: lasp2(a, b, c, d, sp=sp)).lower(
+        q, k, v, log_a).compile().as_text()
+    ags = [l for l in txt.splitlines() if re.search(r"all-gather\(", l)]
+    sizes = sorted(
+        int(np.prod([int(x) for x in re.search(
+            r"\[([\d,]+)\]", l).group(1).split(",")])) for l in ags)
+    assert len(ags) == 2, f"expected 2 all-gathers, got {len(ags)}"
+    # the big one is the (W,B,H,dk,dv) state gather
+    assert sizes[-1] == 8 * B * H * dk * dv
+    assert not re.search(r"all-to-all\(|collective-permute\(", txt)
+
+
+@check("LASP-1 emits W-1 sequential permute steps (ring), LASP-2 none")
+def _():
+    import re
+    txt = jax.jit(lambda a, b, c, d: lasp1(a, b, c, d, sp=sp)).lower(
+        q, k, v, log_a).compile().as_text()
+    assert re.search(r"collective-permute", txt), "ring should use ppermute"
+    assert re.search(r"while", txt), "ring loop expected"
+
+
+# --- softmax side (LASP-2H) -------------------------------------------------
+
+Hq, Hkv, dh = 8, 2, 32
+qs = jax.random.normal(ks[0], (B, Hq, S, dh)) * 0.5
+ks_ = jax.random.normal(ks[1], (B, Hkv, S, dh)) * 0.5
+vs = jax.random.normal(ks[2], (B, Hkv, S, dh)) * 0.5
+
+
+@check("LASP-2H AllGather-CP (Alg.7) == full attention (+grads)")
+def _():
+    ref = allgather_context_attention(qs, ks_, vs, sp=None)
+    o = jax.jit(lambda a, b, c: allgather_context_attention(
+        a, b, c, sp=sp))(qs, ks_, vs)
+    np.testing.assert_allclose(o, ref, rtol=2e-4, atol=2e-4)
+    g1 = jax.jit(jax.grad(lambda a: jnp.sum(jnp.sin(
+        allgather_context_attention(a, ks_, vs, sp=sp)))))(qs)
+    g0 = jax.jit(jax.grad(lambda a: jnp.sum(jnp.sin(
+        allgather_context_attention(a, ks_, vs, sp=None)))))(qs)
+    np.testing.assert_allclose(g1, g0, rtol=1e-3, atol=1e-3)
+
+
+@check("Ring Attention == Megatron-SP == full attention")
+def _():
+    ref = allgather_context_attention(qs, ks_, vs, sp=None)
+    o1 = jax.jit(lambda a, b, c: ring_attention(a, b, c, sp=sp))(qs, ks_, vs)
+    o2 = jax.jit(lambda a, b, c: megatron_sp_attention(
+        a, b, c, sp=sp))(qs, ks_, vs)
+    np.testing.assert_allclose(o1, ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(o2, ref, rtol=2e-4, atol=2e-4)
+
+
+@check("sliding-window CP == sliding-window reference")
+def _():
+    ref = allgather_context_attention(qs, ks_, vs, sp=None,
+                                      sliding_window=64)
+    o = jax.jit(lambda a, b, c: allgather_context_attention(
+        a, b, c, sp=sp, sliding_window=64))(qs, ks_, vs)
+    np.testing.assert_allclose(o, ref, rtol=2e-4, atol=2e-4)
+
+
+@check("flash-decoding sharded decode == local decode (3 cache lens)")
+def _():
+    Sc = 512
+    kc = jax.random.normal(ks[0], (B, Hkv, Sc, dh)) * 0.5
+    vc = jax.random.normal(ks[1], (B, Hkv, Sc, dh)) * 0.5
+    q1 = jax.random.normal(ks[2], (B, Hq, 1, dh)) * 0.5
+    for clen in (Sc, 300, 37):
+        ref = sharded_decode_attention(q1, kc, vc, clen, sp=None)
+        o = jax.jit(lambda a, b, c, cl=clen: sharded_decode_attention(
+            a, b, c, cl, sp=sp))(q1, kc, vc)
+        np.testing.assert_allclose(o, ref, rtol=2e-4, atol=2e-4)
+
+
+# --- model-level on a 2D mesh ----------------------------------------------
+
+@check("sharded model forward == single-device forward (dense+SP)")
+def _():
+    from repro.configs import get_smoke
+    from repro.models import model as M
+    from repro.sharding.rules import make_plan
+
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    cfg = get_smoke("starcoder2-15b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                cfg.vocab_size)
+    ref, _ = jax.jit(lambda p, t: M.forward(p, t, cfg, remat="none"))(
+        params, tokens)
+    plan = make_plan(mesh, "prefill", global_batch=2,
+                     n_kv_heads=cfg.n_kv_heads)
+    out, _ = jax.jit(lambda p, t: M.forward(p, t, cfg, plan,
+                                            remat="none"))(params, tokens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@check("sharded train step == single-device train step (loss match)")
+def _():
+    from repro.configs import get_smoke
+    from repro.configs.base import RunConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.sharding.rules import make_plan
+    from repro.train.step import init_state, make_train_step
+
+    cfg = get_smoke("linear-llama3-1b")
+    run = RunConfig(num_microbatches=2, remat="none", total_steps=10)
+    data = SyntheticLM(cfg.vocab_size, 64, 8, seed=3)
+    batch = data.microbatched(0, 2)
+
+    s0 = init_state(jax.random.PRNGKey(0), cfg, run)
+    from repro.sharding.rules import local_plan
+    _, m_ref = jax.jit(make_train_step(cfg, run, local_plan()))(s0, batch)
+
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=cfg.n_kv_heads)
+    s1 = init_state(jax.random.PRNGKey(0), cfg, run)
+    _, m_sh = jax.jit(make_train_step(cfg, run, plan))(s1, batch)
+    np.testing.assert_allclose(float(m_sh["loss"]), float(m_ref["loss"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@check("int8 error-feedback cross-pod grad sync ~= exact mean")
+def _():
+    from repro.optim.compression import compress_sync_tree
+    mesh = make_test_mesh((2, 4), ("pod", "data"))
+    gs = jax.random.normal(ks[0], (2, 64, 64)) * 1e-3   # per-pod grads
+    e0 = jnp.zeros((2, 64, 64))
+
+    def body(g_, e_):
+        s, e = compress_sync_tree(g_[0], e_[0], pod_axis="pod")
+        return s, e[None]
+
+    synced, err = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P("pod"), P("pod")),
+        out_specs=(P(), P("pod")), axis_names={"pod"}, check_vma=False))(
+            gs, e0)
+    exact = jnp.mean(gs, axis=0)
+    rel = float(jnp.max(jnp.abs(synced - exact))
+                / (jnp.max(jnp.abs(exact)) + 1e-12))
+    assert rel < 0.02, f"compression error too large: {rel}"
+    # exactness identity: mean(g) == synced + mean(error feedback)
+    np.testing.assert_allclose(np.asarray(synced + jnp.mean(err, 0)),
+                               np.asarray(exact), rtol=1e-5, atol=1e-8)
+
+
+@check("mini dry-run: lower+compile a smoke train cell on the 4x2 mesh")
+def _():
+    from repro.configs import get_smoke
+    from repro.launch.cells import build_cell
+    mesh = make_test_mesh((4, 2), ("data", "model"))
+    cell = build_cell("hymba-1.5b", "train_4k", mesh,
+                      cfg_override=get_smoke("hymba-1.5b"))
+    compiled = cell.lower().compile()
+    assert compiled.memory_analysis() is not None
+    assert (compiled.cost_analysis() or {}).get("flops", 0) > 0
+
+
+if __name__ == "__main__":
+    print(f"ALL {len(PASSED)} DISTRIBUTED CHECKS PASSED")

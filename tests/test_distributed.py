@@ -1,0 +1,16 @@
+"""Runs the 8-virtual-device distributed battery in a subprocess (so this
+pytest process keeps its single default device)."""
+
+import os
+import subprocess
+import sys
+
+def test_distributed_battery():
+    script = os.path.join(os.path.dirname(__file__),
+                          "distributed_checks.py")
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-3000:])
+    assert proc.returncode == 0, "distributed checks failed"
+    assert "ALL" in proc.stdout and "PASSED" in proc.stdout

@@ -1,0 +1,85 @@
+"""Per-kernel Pallas sweeps (interpret mode) vs the ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lasp2_chunk import lasp2_chunk_fwd
+from repro.kernels.ref import flash_attention_ref, linear_attention_ref
+
+TOL = {jnp.float32: 3e-4, jnp.bfloat16: 4e-2}
+
+
+@pytest.mark.parametrize("s,dk,dv", [(256, 64, 64), (512, 128, 128),
+                                     (256, 32, 64), (128, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("decay", [False, True])
+def test_lasp2_chunk_kernel_sweep(rng, s, dk, dv, dtype, decay):
+    bh = 3
+    ks = jax.random.split(rng, 4)
+    q = (jax.random.normal(ks[0], (bh, s, dk)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (bh, s, dk)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (bh, s, dv)) * 0.5).astype(dtype)
+    la = (-jnp.abs(jax.random.normal(ks[3], (bh, s))) * 0.03) if decay \
+        else jnp.zeros((bh, s))
+    o, st, ld = lasp2_chunk_fwd(q, k, v, la, block_size=128, interpret=True)
+    oref, stref = linear_attention_ref(q, k, v, la)
+    t = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32), rtol=t, atol=t)
+    np.testing.assert_allclose(st, stref, rtol=t, atol=t)
+    np.testing.assert_allclose(ld, jnp.sum(la, -1), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sq,sk,hq,hkv,dh", [
+    (256, 256, 4, 2, 64), (128, 128, 8, 1, 64), (256, 256, 4, 4, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_kernel_sweep(rng, sq, sk, hq, hkv, dh, dtype, causal,
+                            window):
+    b = 2
+    ks = jax.random.split(rng, 3)
+    q = (jax.random.normal(ks[0], (b, hq, sq, dh)) * 0.4).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, hkv, sk, dh)) * 0.4).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, hkv, sk, dh)) * 0.5).astype(dtype)
+    o = flash_attention(q, k, v, causal=causal, sliding_window=window,
+                        block_q=64, block_k=64, interpret=True)
+    oref = flash_attention_ref(q, k, v, causal=causal,
+                               sliding_window=window)
+    t = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32), rtol=t, atol=t)
+
+
+def test_ops_dispatch_linear(rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 4, 256, 32)) * 0.3
+    k = jax.random.normal(ks[1], (2, 4, 256, 32)) * 0.3
+    v = jax.random.normal(ks[2], (2, 4, 256, 32)) * 0.5
+    o_xla, st_xla, _ = ops.linear_attention_op(q, k, v, backend="xla")
+    o_int, st_int, _ = ops.linear_attention_op(q, k, v, backend="interpret")
+    np.testing.assert_allclose(o_xla, o_int, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(st_xla, st_int, rtol=3e-4, atol=3e-4)
+
+
+def test_ops_dispatch_flash(rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 4, 256, 64)) * 0.4
+    k = jax.random.normal(ks[1], (2, 2, 256, 64)) * 0.4
+    v = jax.random.normal(ks[2], (2, 2, 256, 64)) * 0.5
+    o_xla = ops.flash_attention_op(q, k, v, backend="xla")
+    o_int = ops.flash_attention_op(q, k, v, backend="interpret")
+    np.testing.assert_allclose(o_xla, o_int, rtol=3e-4, atol=3e-4)
+
+
+def test_kernel_vmem_footprint_static():
+    """BlockSpec tiles must fit VMEM (16 MB/core budget, fp32 scratch)."""
+    bq, bk, dh, dkv = 128, 128, 128, 128
+    flash_tiles = (bq * dh + 2 * bk * dh + bq * dh) * 4 + bq * dh * 4
+    chunk_tiles = (2 * 128 * dkv + 2 * 128 * dkv) * 4 + dkv * dkv * 4
+    assert flash_tiles < 16 * 2 ** 20
+    assert chunk_tiles < 16 * 2 ** 20

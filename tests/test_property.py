@@ -1,0 +1,117 @@
+"""Hypothesis property tests on the system's invariants (DESIGN.md §6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linear_attention as la
+from repro.core.lasp2h import causal_mask
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _qkv(seed, b, h, s, dk, dv):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    return (jax.random.normal(ks[0], (b, h, s, dk)) * 0.3,
+            jax.random.normal(ks[1], (b, h, s, dk)) * 0.3,
+            jax.random.normal(ks[2], (b, h, s, dv)) * 0.5,
+            -jnp.abs(jax.random.normal(ks[3], (b, h, s))) * 0.05)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), block=st.sampled_from([16, 32, 64]),
+       s_mult=st.integers(1, 4))
+def test_chunk_invariance(seed, block, s_mult):
+    """Output must not depend on the chunking (the core LASP-2 soundness
+    property: any chunk split — hence any device count — is equivalent)."""
+    s = 64 * s_mult
+    q, k, v, log_a = _qkv(seed, 1, 2, s, 16, 24)
+    ref = la.sequential_oracle(q, k, v, log_a)
+    out = la.chunk_scan(q, k, v, log_a, block_size=block)
+    np.testing.assert_allclose(out.o, ref.o, rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), pert=st.integers(1, 62))
+def test_causality(seed, pert):
+    """Perturbing token j never changes outputs at positions < j."""
+    q, k, v, log_a = _qkv(seed, 1, 2, 64, 16, 24)
+    out1 = la.chunk_scan(q, k, v, log_a, block_size=16).o
+    k2 = k.at[..., pert, :].add(1.0)
+    v2 = v.at[..., pert, :].add(-1.0)
+    out2 = la.chunk_scan(q, k2, v2, log_a, block_size=16).o
+    np.testing.assert_allclose(out1[..., :pert, :], out2[..., :pert, :],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[..., pert:, :], out2[..., pert:, :])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), cut8=st.integers(2, 14))
+def test_decay_semigroup(seed, cut8):
+    cut = cut8 * 8   # chunk_summaries needs block-divisible lengths
+    """M(0→S) == A(cut→S)·M(0→cut) + M(cut→S)."""
+    _, k, v, log_a = _qkv(seed, 1, 2, 128, 16, 24)
+    m_full, ld_full = la.chunk_summaries(k, v, log_a, block_size=16)
+    m1, ld1 = la.chunk_summaries(k[..., :cut, :], v[..., :cut, :],
+                                 log_a[..., :cut], block_size=8)
+    m2, ld2 = la.chunk_summaries(k[..., cut:, :], v[..., cut:, :],
+                                 log_a[..., cut:], block_size=8)
+    combined = jnp.exp(ld2)[..., None, None] * m1 + m2
+    np.testing.assert_allclose(combined, m_full, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(ld1 + ld2, ld_full, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), ndocs=st.integers(2, 4))
+def test_packing_equivalence(seed, ndocs):
+    """Packed docs with resets == each doc processed separately."""
+    s = 96
+    q, k, v, _ = _qkv(seed, 1, 1, s, 8, 8)
+    rng = np.random.default_rng(seed)
+    cuts = np.sort(rng.choice(np.arange(8, s - 8), ndocs - 1,
+                              replace=False))
+    bounds = [0, *cuts.tolist(), s]
+    log_a = jnp.zeros((1, 1, s))
+    for c in cuts:
+        log_a = log_a.at[..., int(c)].set(la.RESET_LOG_A)
+    packed = la.chunk_scan(q, k, v, log_a, block_size=16).o
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        sep = la.sequential_oracle(q[..., lo:hi, :], k[..., lo:hi, :],
+                                   v[..., lo:hi, :], None).o
+        np.testing.assert_allclose(packed[..., lo:hi, :], sep,
+                                   rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), rep=st.sampled_from([1, 2, 4]))
+def test_gqa_repeat_equivalence(seed, rep):
+    """GQA == MHA with repeated KV heads (flash ref property)."""
+    from repro.kernels.ref import flash_attention_ref
+    b, hkv, s, dh = 1, 2, 64, 16
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hkv * rep, s, dh)) * 0.4
+    k = jax.random.normal(ks[1], (b, hkv, s, dh)) * 0.4
+    v = jax.random.normal(ks[2], (b, hkv, s, dh)) * 0.5
+    o1 = flash_attention_ref(q, k, v)
+    o2 = flash_attention_ref(q, jnp.repeat(k, rep, 1),
+                             jnp.repeat(v, rep, 1))
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(sq=st.integers(1, 32), off=st.integers(0, 32),
+       win=st.sampled_from([None, 4, 16]))
+def test_causal_mask_properties(sq, off, win):
+    sk = sq + off
+    m = np.asarray(causal_mask(sq, sk, off, sliding_window=win))
+    for i in range(sq):
+        for j in range(sk):
+            expect = (off + i) >= j
+            if win is not None:
+                expect = expect and ((off + i) - j) < win
+            assert m[i, j] == expect
