@@ -17,8 +17,8 @@ import jax, jax.numpy as jnp
 from repro.core.lasp2 import lasp2, SPConfig
 from repro.core.baselines import lasp1, ring_attention, megatron_sp_attention
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import auto_axis_types
+mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
 sp = SPConfig(mesh=mesh, sp_axis="data")
 B, H, d = 1, 8, 64
 res = {}

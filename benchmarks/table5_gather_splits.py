@@ -17,8 +17,8 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.linear_attention import chunk_scan, chunk_summaries
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import auto_axis_types
+mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
 B, H, S, d = 1, 16, 65536, 128
 key = jax.random.PRNGKey(0)
 ks = jax.random.split(key, 3)

@@ -21,13 +21,13 @@ from benchmarks.common import emit, run_subprocess_bench
 _CODE = r"""
 import json
 import jax, jax.numpy as jnp
+from repro.launch.mesh import auto_axis_types
 from repro.core.lasp2 import lasp2, SPConfig
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 res = {}
 for w, s in ((2, 16384), (4, 32768), (8, 65536)):
-    mesh = jax.make_mesh((w,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((w,), ("data",), **auto_axis_types(1))
     sp = SPConfig(mesh=mesh, sp_axis="data")
     B, H, d = 1, 16, 128
     sh = NamedSharding(mesh, P(None, None, "data", None))

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Cross-reference checker for the documentation suite.
+
+Verifies that (a) every relative markdown link / image in README.md,
+docs/**.md, and the other top-level *.md files points at a file that
+exists, and (b) every `path/to/file.py`-style inline-code reference to a
+repo file resolves. External (http/…) links are not fetched.
+
+  python scripts/check_links.py        # exit 1 + report on broken refs
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+CODEPATH_RE = re.compile(
+    r"`([A-Za-z0-9_.-]+(?:/[A-Za-z0-9_.*-]+)+\.(?:py|md|toml|yml|json))`")
+
+
+SKIP = {"ISSUE.md"}          # transient per-PR task file, not docs
+
+# Inline-code refs may be written relative to any of these roots
+# (prose shorthand like `core/lasp2.py` means src/repro/core/lasp2.py).
+CODE_ROOTS = ("", "src", "src/repro")
+
+
+def md_files():
+    for p in ROOT.glob("*.md"):
+        if p.name not in SKIP:
+            yield p
+    yield from (ROOT / "docs").rglob("*.md")
+
+
+def check_file(md: Path):
+    errors = []
+    text = md.read_text()
+    for rx, kind in ((LINK_RE, "link"), (CODEPATH_RE, "code ref")):
+        for m in rx.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if "*" in target:            # glob-style mention, not a path
+                continue
+            line = text[:m.start()].count("\n") + 1
+            if kind == "link":
+                ok = (md.parent / target).resolve().exists()
+            else:
+                ok = any((ROOT / r / target).exists() for r in CODE_ROOTS)
+            if not ok:
+                errors.append(f"{md.relative_to(ROOT)}:{line}: "
+                              f"broken {kind} -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    n = 0
+    for md in sorted(set(md_files())):
+        n += 1
+        errors += check_file(md)
+    if errors:
+        print(f"{len(errors)} broken cross-reference(s) in {n} files:")
+        print("\n".join(errors))
+        return 1
+    print(f"OK: all cross-references resolve ({n} markdown files).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map as _shard_map
+
 from repro.core.lasp2 import SPConfig, _pick_block
 from repro.core.lasp2h import NEG_INF, _softmax_attend, causal_mask
 from repro.core.linear_attention import chunk_scan, chunk_summaries
@@ -80,7 +82,7 @@ def lasp1(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
 
     spec = P(None, None, axis, None)
     aspec = P(None, None, axis)
-    return jax.shard_map(local_fn, mesh=sp.mesh,
+    return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec, aspec), out_specs=spec,
                          axis_names={axis}, check_vma=False)(q, k, v, log_a)
 
@@ -138,7 +140,7 @@ def ring_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         return o.astype(q_.dtype)
 
     spec = P(None, None, axis, None)
-    return jax.shard_map(local_fn, mesh=sp.mesh,
+    return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec), out_specs=spec,
                          axis_names={axis}, check_vma=False)(q, k, v)
 
@@ -171,6 +173,6 @@ def megatron_sp_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         return jax.lax.dynamic_slice_in_dim(o, t * c, c, axis=2)
 
     spec = P(None, None, axis, None)
-    return jax.shard_map(local_fn, mesh=sp.mesh,
+    return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec), out_specs=spec,
                          axis_names={axis}, check_vma=False)(q, k, v)

@@ -1,0 +1,55 @@
+"""Version compatibility shims for jax APIs the repo relies on.
+
+The codebase targets the modern ``jax.shard_map`` partial-manual API
+(``axis_names`` = the manual axes, ``check_vma``). On older jax (< 0.5,
+e.g. the 0.4.x pinned in some CPU containers) the same functionality lives
+in ``jax.experimental.shard_map.shard_map`` with the inverse convention
+(``auto`` = the NON-manual axes, ``check_rep``). This module exposes a
+single :func:`shard_map` with the modern signature that dispatches to
+whichever implementation exists.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """Partial-manual shard_map with the modern keyword signature.
+
+    ``axis_names``: set of mesh axes made manual inside ``f`` (all axes
+    when None) — other axes stay auto-sharded by GSPMD.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    # Old jax: the partial-auto mode (``auto=``) lowers axis_index to a
+    # PartitionId instruction XLA cannot SPMD-partition, so we run the body
+    # fully manual instead. Axes absent from in_specs/out_specs are then
+    # replicated inside the region rather than auto-sharded by GSPMD —
+    # numerically identical, only the TP sharding of the body is lost.
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` across the 0.4→0.5 rename
+    (older jax exposes it as ``TPUCompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version
+    (older releases return a one-element list of per-program dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import shard_map as _shard_map
+
 from repro.core.linear_attention import chunk_scan, chunk_summaries
 
 
@@ -277,7 +279,7 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
     spec_qkv = P(*([None] * (nd - 2)), axis, None)
     spec_a = P(*([None] * (nd - 2)), axis)
     spec_state = P(*([None] * nd))
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=sp.mesh,
         in_specs=(spec_qkv, spec_qkv, spec_qkv, spec_a),
         out_specs=(spec_qkv, spec_state), axis_names={axis},
@@ -327,7 +329,7 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         def mapped(q_, k_, v_, la_):
             return fn(q_, k_, v_, la_, axis, block_size)
 
-        return jax.shard_map(
+        return _shard_map(
             mapped, mesh=sp.mesh,
             in_specs=(spec_qkv, spec_qkv, spec_qkv, spec_a),
             out_specs=spec_qkv, axis_names={axis},
@@ -341,7 +343,7 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
             o, _ = _noncausal_fwd_local(q_, k_, v_, axis, block_size)
             return o
 
-    return jax.shard_map(
+    return _shard_map(
         mapped_nc, mesh=sp.mesh, in_specs=(spec_qkv, spec_qkv, spec_qkv),
         out_specs=spec_qkv, axis_names={axis},
         # check_vma=False: scan carries start as unvarying zeros; the

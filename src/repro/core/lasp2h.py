@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map as _shard_map
+
 from repro.core.lasp2 import SPConfig
 
 NEG_INF = -1e30
@@ -105,7 +107,7 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         return _softmax_attend(q_, kg, vg, scale=scale, mask=mask)
 
     spec = P(None, None, axis, None)
-    return jax.shard_map(local_fn, mesh=sp.mesh,
+    return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec), out_specs=spec,
                          axis_names={axis}, check_vma=False)(q, k, v)
 
@@ -274,7 +276,7 @@ def windowed_context_attention(q, k, v, window: int, *,
                                 q_offset=t * c, has_prefix=True)
 
     spec = P(None, None, axis, None)
-    return jax.shard_map(local_fn, mesh=sp.mesh,
+    return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec), out_specs=spec,
                          axis_names={axis}, check_vma=False)(q, k, v)
 
@@ -355,7 +357,82 @@ def sharded_decode_attention(q, k_cache, v_cache, cache_len, *,
     qspec = P(None, None, None, None)           # q replicated over sp axis
     kvspec = P(None, None, axis, None)          # cache seq sharded
     cache_len = jnp.asarray(cache_len)
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=sp.mesh, in_specs=(qspec, kvspec, kvspec, P()),
         out_specs=qspec, axis_names={axis}, check_vma=False)(
             q, k_cache, v_cache, cache_len)
+
+
+def ring_decode_attention(q, k_cache, v_cache, key_pos, q_pos, *,
+                          sliding_window=None, scale: Optional[float] = None,
+                          sp: Optional[SPConfig] = None):
+    """One-token attention against a ring-buffer KV cache.
+
+    The serving cache for softmax layers stores only the last ``R`` tokens
+    (``R`` = sliding window for windowed layers): slot ``i`` of the ring
+    holds the key/value written at absolute position ``key_pos[b, i]``
+    (``-1`` = never written). Because softmax attention is permutation
+    invariant given correct masking, slots are attended in storage order —
+    no unrotation — with validity derived from the stored positions:
+
+        valid = key_pos >= 0  &  key_pos <= q_pos
+                [&  q_pos - key_pos < sliding_window]
+
+    q: (B, Hq, 1, dh); k_cache/v_cache: (B, Hkv, R, dh);
+    key_pos: (B, R) int32 absolute positions; q_pos: (B,) int32 per-row
+    query positions (continuous batching — rows decode at different
+    offsets). ``sliding_window`` may be a traced scalar (hymba's dynamic
+    global/local switch). With ``sp``, ring slots are sharded over
+    ``sp.sp_axis`` and per-shard online-softmax partials are merged as in
+    :func:`sharded_decode_attention`.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+
+    def partial_attend(q_, k_, v_, valid):
+        b, hq, _, dh = q_.shape
+        rep = hq // k_.shape[1]
+        kf = jnp.repeat(k_, rep, axis=1).astype(jnp.float32)
+        vf = jnp.repeat(v_, rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhd,bhtd->bht", q_[:, :, 0].astype(jnp.float32),
+                       kf) * scale
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.where(valid[:, None, :], jnp.exp(s - m[..., None]), 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bht,bhtd->bhd", p, vf)
+        return o, m, l
+
+    def slot_valid(kp, qp):
+        valid = (kp >= 0) & (kp <= qp[:, None])
+        if sliding_window is not None:
+            valid &= (qp[:, None] - kp) < sliding_window
+        return valid
+
+    if sp is None or sp.degree == 1:
+        o, m, l = partial_attend(q, k_cache, v_cache,
+                                 slot_valid(key_pos, q_pos))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o[:, :, None, :].astype(q.dtype)
+
+    axis = sp.sp_axis
+
+    def local_fn(q_, k_, v_, kp_, qp_):
+        o, m, l = partial_attend(q_, k_, v_, slot_valid(kp_, qp_))
+        og = jax.lax.all_gather(o, axis)
+        mg = jax.lax.all_gather(m, axis)
+        lg = jax.lax.all_gather(l, axis)
+        m_glob = jnp.max(mg, axis=0)
+        corr = jnp.exp(mg - m_glob[None])
+        l_glob = jnp.sum(lg * corr, axis=0)
+        o_glob = jnp.sum(og * corr[..., None], axis=0)
+        o_final = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return o_final[:, :, None, :].astype(q_.dtype)
+
+    qspec = P(None, None, None, None)
+    kvspec = P(None, None, axis, None)
+    return _shard_map(
+        local_fn, mesh=sp.mesh,
+        in_specs=(qspec, kvspec, kvspec, P(None, axis), P()),
+        out_specs=qspec, axis_names={axis}, check_vma=False)(
+            q, k_cache, v_cache, key_pos, q_pos)

@@ -87,6 +87,35 @@ def sequential_oracle(q, k, v, log_a=None, initial_state=None, causal=True):
     return ChunkOutputs(o.astype(q.dtype), m_final, total_log_a)
 
 
+def recurrent_step(q, k, v, log_a=None, *, state, log_decay=None):
+    """One recurrent decode step (paper Eq. 4) — the constant-memory path.
+
+    Single-token inputs ``q, k: (..., dk)``, ``v: (..., dv)``,
+    ``log_a: (...,)`` against the carried fp32 ``state: (..., dk, dv)`` and
+    cumulative ``log_decay: (...,)``:
+
+        M' = a * M + k^T v,      o = q M',      L' = L + log a
+
+    Returns ``(o (..., dv) fp32, state' fp32, log_decay' fp32)``. Exactly
+    the per-token recurrence of :func:`sequential_oracle`, so decoding from
+    a prefill state reproduces the full chunked forward. The serving decode
+    cache stores only ``(state, log_decay)`` — O(1) in context length.
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    m = state.astype(jnp.float32)
+    if log_decay is None:
+        log_decay = jnp.zeros(m.shape[:-2], jnp.float32)
+    if log_a is not None:
+        laf = log_a.astype(jnp.float32)
+        m = jnp.exp(laf)[..., None, None] * m
+        log_decay = log_decay + laf
+    m = m + kf[..., :, None] * vf[..., None, :]
+    o = jnp.einsum("...k,...kv->...v", qf, m)
+    return o, m, log_decay
+
+
 # ---------------------------------------------------------------------------
 # Block-local (intra-chunk) primitives.
 # ---------------------------------------------------------------------------

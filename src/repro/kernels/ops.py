@@ -15,10 +15,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear_attention import chunk_scan
+from repro.core.linear_attention import chunk_scan, recurrent_step
 from repro.core.lasp2h import _softmax_attend, causal_mask
 from repro.kernels import flash_attention as _flash
 from repro.kernels import lasp2_chunk as _chunk
+from repro.kernels import lasp2_decode as _decode
 
 
 def default_backend() -> str:
@@ -37,18 +38,58 @@ def linear_attention_op(q, k, v, log_a=None, *, block_size: int = 128,
     dv = v.shape[-1]
     if log_a is None:
         log_a = jnp.zeros((b, h, s), jnp.float32)
+    # Serving prefill sees arbitrary prompt lengths. Rather than shrinking
+    # the block to a divisor of S (degenerates to 1-token blocks for prime
+    # lengths), right-pad to the next block multiple: zero k/v rows add
+    # nothing to the state and log_a = 0 leaves the decay product alone,
+    # so outputs (sliced back to S), final state, and log decay are exact.
+    bs = min(block_size, s)
+    if s % bs:
+        pad = bs - s % bs
+        zkv = ((0, 0),) * (q.ndim - 2) + ((0, pad), (0, 0))
+        q, k, v = (jnp.pad(x, zkv) for x in (q, k, v))
+        log_a = jnp.pad(log_a, ((0, 0),) * (log_a.ndim - 1) + ((0, pad),))
+        o, st, ld = linear_attention_op(q, k, v, log_a,
+                                        block_size=block_size,
+                                        backend=backend)
+        return o[..., :s, :], st, ld
     if backend in ("pallas", "interpret"):
         qf = q.reshape(b * h, s, dk)
         kf = k.reshape(b * h, s, dk)
         vf = v.reshape(b * h, s, dv)
         laf = log_a.reshape(b * h, s)
         o, st, ld = _chunk.lasp2_chunk_fwd(
-            qf, kf, vf, laf, block_size=min(block_size, s),
+            qf, kf, vf, laf, block_size=bs,
             interpret=(backend == "interpret"))
         return (o.reshape(b, h, s, dv), st.reshape(b, h, dk, dv),
                 ld.reshape(b, h))
-    out = chunk_scan(q, k, v, log_a, block_size=min(block_size, s))
+    out = chunk_scan(q, k, v, log_a, block_size=bs)
     return out.o, out.state, out.log_decay
+
+
+def linear_decode_op(q, k, v, log_a, state, log_decay, *,
+                     backend: Optional[str] = None):
+    """Single-token recurrent linear-attention decode (``mode="decode"``).
+
+    q, k: (B, H, dk); v: (B, H, dv); log_a: (B, H) or None;
+    state: (B, H, dk, dv) fp32; log_decay: (B, H) fp32.
+    Returns (o (B, H, dv) fp32, state', log_decay') — the constant-memory
+    decode path: no prefix re-scan, state updated in place.
+    """
+    backend = backend or default_backend()
+    b, h, dk = q.shape
+    dv = v.shape[-1]
+    if log_a is None:
+        log_a = jnp.zeros((b, h), jnp.float32)
+    if backend in ("pallas", "interpret"):
+        o, st, ld = _decode.lasp2_decode_step(
+            q.reshape(b * h, dk), k.reshape(b * h, dk),
+            v.reshape(b * h, dv), log_a.reshape(b * h),
+            state.reshape(b * h, dk, dv), log_decay.reshape(b * h),
+            interpret=(backend == "interpret"))
+        return (o.reshape(b, h, dv), st.reshape(b, h, dk, dv),
+                ld.reshape(b, h))
+    return recurrent_step(q, k, v, log_a, state=state, log_decay=log_decay)
 
 
 def flash_attention_op(q, k, v, *, causal: bool = True, sliding_window=None,

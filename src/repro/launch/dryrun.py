@@ -52,7 +52,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str):
         rec["compile_s"] = round(time.time() - t1, 1)
         rec["status"] = "ok"
         rec["memory"] = H.memory_report(compiled)
-        ca = compiled.cost_analysis() or {}
+        from repro.core.compat import cost_analysis
+        ca = cost_analysis(compiled)
         rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
                        "bytes_accessed": float(ca.get("bytes accessed",
                                                       0.0))}

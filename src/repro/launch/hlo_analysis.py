@@ -152,7 +152,8 @@ class CostVector:
 
 
 def measure(compiled, total_devices: int) -> CostVector:
-    ca = compiled.cost_analysis() or {}
+    from repro.core.compat import cost_analysis
+    ca = cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text(), total_devices)
     summ = collective_summary(colls)
     by_op = {c: summ.get(c, 0.0) for c in _COLL_OPS if c in summ}

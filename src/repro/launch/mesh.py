@@ -10,18 +10,25 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_types(n: int):
+    """``axis_types`` kwargs compatible with both old and new jax.
+
+    ``jax.sharding.AxisType`` only exists from jax 0.5; older versions
+    treat every axis as Auto already, so the kwarg is simply omitted.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n}
+    return {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16×16 = 256 chips, ("data", "model").
     Multi-pod: 2×16×16 = 512 chips, ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for in-repo distributed tests (8 host devices)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))

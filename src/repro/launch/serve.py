@@ -1,7 +1,8 @@
-"""Serving launcher: load/initialize a model and serve batched requests.
+"""Serving launcher: load/initialize a model and serve batched requests
+through the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b --smoke \
-      --batch 4 --prompt-len 64 --new-tokens 32
+      --requests 8 --prompt-len 64 --new-tokens 32
 """
 
 from __future__ import annotations
@@ -15,15 +16,19 @@ def main():
     ap.add_argument("--arch", default="linear-llama3-1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--linearize", type=int, default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests to submit")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (continuous-batching grid)")
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="max prompt length (ragged, varied per request)")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
+    import numpy as np
 
     from repro.checkpoint.manager import CheckpointManager
     from repro.configs import get_config, get_smoke
@@ -42,26 +47,53 @@ def main():
             params = state["params"]
             print(f"[serve] restored params from step {step}")
 
-    kw = {}
-    if cfg.encoder is not None:
-        kw["enc_frames"] = jax.random.normal(
-            key, (args.batch, cfg.encoder.n_frames, cfg.d_model)) * 0.1
-    if cfg.n_image_tokens:
-        kw["img_emb"] = jax.random.normal(
-            key, (args.batch, cfg.n_image_tokens, cfg.d_model)) * 0.1
+    max_len = args.prompt_len + args.new_tokens
+    engine = ServeEngine(cfg, params, max_len=max_len,
+                         max_batch=args.max_batch)
 
-    engine = ServeEngine(cfg, params,
-                         max_len=args.prompt_len + args.new_tokens)
-    prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    if cfg.encoder is not None or cfg.n_image_tokens:
+        # encoder / image-conditioned models run the static-batch path
+        kw = {}
+        if cfg.encoder is not None:
+            kw["enc_frames"] = jax.random.normal(
+                key, (args.max_batch, cfg.encoder.n_frames,
+                      cfg.d_model)) * 0.1
+        if cfg.n_image_tokens:
+            kw["img_emb"] = jax.random.normal(
+                key, (args.max_batch, cfg.n_image_tokens, cfg.d_model)) * 0.1
+        prompts = jax.random.randint(
+            key, (args.max_batch, args.prompt_len), 0, cfg.vocab_size)
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, args.new_tokens,
+                              temperature=args.temperature, **kw)
+        dt = time.perf_counter() - t0
+        total_new = out.shape[0] * args.new_tokens
+        print(f"[serve] {cfg.name}: static batch {out.shape} in {dt:.2f}s "
+              f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
+        return
+
+    # continuous batching: ragged prompts, more requests than slots
+    rng = np.random.default_rng(0)
+    lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
+                        size=args.requests)
+    uids = []
+    for i, ln in enumerate(lens):
+        prompt = rng.integers(0, cfg.vocab_size, size=int(ln))
+        uids.append(engine.submit(prompt, args.new_tokens,
+                                  temperature=args.temperature,
+                                  seed=0, stream=i))
     t0 = time.perf_counter()
-    out = engine.generate(prompts, args.new_tokens,
-                          temperature=args.temperature, **kw)
+    results = engine.run()
     dt = time.perf_counter() - t0
-    total_new = args.batch * args.new_tokens
-    print(f"[serve] {cfg.name}: generated {out.shape} in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
-    print("[serve] first row:", out[0][:16], "...")
+    total_new = sum(len(v) for v in results.values())
+    stats = engine.cache_stats()
+    print(f"[serve] {cfg.name}: {len(results)} requests "
+          f"(prompts {lens.min()}..{lens.max()}) on {args.max_batch} slots "
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s incl. prefill+compile)")
+    print(f"[serve] cache bytes: linear_state={stats['linear_state']} "
+          f"kv_ring={stats['kv_ring']} conv={stats['conv']} "
+          f"total={stats['total']}")
+    print("[serve] first result:", results[uids[0]][:16], "...")
 
 
 if __name__ == "__main__":

@@ -65,8 +65,9 @@ def main():
                        seed=args.seed)
     plan = None
     if args.multi_device and len(jax.devices()) > 1:
+        from repro.launch.mesh import auto_axis_types
         mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+                             **auto_axis_types(1))
         plan = make_plan(mesh, "train", global_batch=args.batch,
                          n_kv_heads=cfg.n_kv_heads)
     state, history = train(cfg, run, data, plan=plan,

@@ -21,10 +21,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map as _shard_map
+
 from repro.configs.base import LayerSpec, MambaConfig, ModelConfig
 from repro.core import linear_attention as la_core
 from repro.core.lasp2 import lasp2
 from repro.core.lasp2h import (allgather_context_attention,
+                               ring_decode_attention,
                                sharded_decode_attention)
 from repro.kernels import ops
 from repro.models.layers import dense_init, mlp_apply, mlp_init, normal, \
@@ -122,48 +125,86 @@ def softmax_apply(params, x, ctx: Ctx, *, window=None, kv_override=None):
     return o @ params["wo"].astype(x.dtype)
 
 
+def softmax_ring_len(spec: LayerSpec, max_len: int) -> int:
+    """Ring-buffer length for a softmax layer's decode KV cache.
+
+    Sliding-window layers (the softmax layers of LASP-2H hybrids) only ever
+    attend the last ``window`` tokens, so the cache holds exactly that many
+    slots — constant in context length. Full-attention layers need the
+    whole history."""
+    if spec.sliding_window:
+        return min(max_len, spec.sliding_window)
+    return max_len
+
+
+def _decode_positions(ctx: Ctx, batch: int):
+    """Per-row decode positions (B,) — scalar positions broadcast (all rows
+    at the same offset); vectors pass through (continuous batching)."""
+    pos = ctx.decode_pos
+    return jnp.broadcast_to(jnp.atleast_1d(pos), (batch,)).astype(jnp.int32)
+
+
 def softmax_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_len,
-                  dtype=jnp.bfloat16):
-    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+                  dtype=jnp.bfloat16, ring=None):
+    r = ring if ring is not None else softmax_ring_len(spec, max_len)
+    shape = (batch, cfg.n_kv_heads, r, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "kpos": jnp.full((batch, r), -1, jnp.int32)}
 
 
-def softmax_prefill_cache(params, x, ctx: Ctx, max_len):
-    """Compute K/V for the prompt and place them in a fresh cache."""
+def softmax_prefill_cache(params, x, ctx: Ctx, max_len, ring=None):
+    """Compute K/V for the prompt and place them in a fresh ring cache.
+
+    Ring slot ``i`` receives the prompt token at the highest position
+    ``p <= last`` with ``p % ring == i`` (the same ``slot = pos % ring``
+    rule decode uses), tagged with its absolute position in ``kpos``.
+    Handles per-row position offsets (left-padded length-bucketed prefill):
+    padding columns carry negative positions and land as empty slots."""
     cfg = ctx.cfg
     _, k, v = _qkv(params, x, cfg, ctx.positions)
-    pad = max_len - k.shape[2]
-    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    k = ctx.plan.act(k, "batch", "kv_heads", "cache_seq", None)
-    v = ctx.plan.act(v, "batch", "kv_heads", "cache_seq", None)
-    return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    b, s = x.shape[0], k.shape[2]
+    r = ring if ring is not None else softmax_ring_len(ctx._spec, max_len)
+    pos2d = jnp.broadcast_to(jnp.atleast_2d(ctx.positions),
+                             (b, s)).astype(jnp.int32)
+    last = pos2d[:, -1]                                   # (B,)
+    i = jnp.arange(r)[None, :]                            # (1, R)
+    p_i = last[:, None] - jnp.mod(last[:, None] - i, r)   # (B, R)
+    col = jnp.clip(p_i - pos2d[:, :1], 0, s - 1)          # position -> column
+    valid = p_i >= 0
+    idx = col[:, None, :, None]
+    kr = jnp.take_along_axis(k, idx, axis=2)
+    vr = jnp.take_along_axis(v, idx, axis=2)
+    kpos = jnp.where(valid, p_i, -1)
+    kr = ctx.plan.act(kr, "batch", "kv_heads", "cache_seq", None)
+    vr = ctx.plan.act(vr, "batch", "kv_heads", "cache_seq", None)
+    return {"k": kr.astype(jnp.bfloat16), "v": vr.astype(jnp.bfloat16),
+            "kpos": kpos}
 
 
 def softmax_decode(params, x, cache, ctx: Ctx, *, window=None):
     cfg, plan = ctx.cfg, ctx.plan
-    pos = ctx.decode_pos
+    posv = _decode_positions(ctx, x.shape[0])             # (B,)
     q, k, v = _qkv(params, x, cfg, None)
-    q = rope(q, pos[None] if jnp.ndim(pos) == 0 else pos, cfg.rope_theta)
-    k = rope(k, pos[None] if jnp.ndim(pos) == 0 else pos, cfg.rope_theta)
-    kc = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
-    vc = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+    q = rope(q, posv[:, None], cfg.rope_theta)
+    k = rope(k, posv[:, None], cfg.rope_theta)
+    r = cache["k"].shape[2]
+    hit = jnp.arange(r)[None, :] == jnp.mod(posv, r)[:, None]   # (B, R)
+    kc = jnp.where(hit[:, None, :, None], k.astype(cache["k"].dtype),
+                   cache["k"])
+    vc = jnp.where(hit[:, None, :, None], v.astype(cache["v"].dtype),
+                   cache["v"])
+    kpos = jnp.where(hit, posv[:, None], cache["kpos"])
     kc = plan.act(kc, "batch", "kv_heads", "cache_seq", None)
     vc = plan.act(vc, "batch", "kv_heads", "cache_seq", None)
-    cache_len = pos + 1
+    sp = None
     if plan.decode_cache_axis is not None:
         from repro.core.lasp2 import SPConfig
         sp = SPConfig(mesh=plan.mesh, sp_axis=plan.decode_cache_axis)
-        o = sharded_decode_attention(q, kc, vc, cache_len, sp=sp,
-                                     sliding_window=window)
-    else:
-        o = sharded_decode_attention(q, kc, vc, cache_len, sp=None,
-                                     sliding_window=window)
+    o = ring_decode_attention(q, kc, vc, kpos, posv,
+                              sliding_window=window, sp=sp)
     o = _heads_merge(o)
     y = o @ params["wo"].astype(x.dtype)
-    return y, {"k": kc, "v": vc}
+    return y, {"k": kc, "v": vc, "kpos": kpos}
 
 
 # ===========================================================================
@@ -237,22 +278,24 @@ def linear_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_len):
     if lac.feature_map == "taylor":
         dk = 1 + dk + dk * dk
     # Constant-size memory state — the paper's selling point: no KV cache.
+    # The cumulative log decay rides along (fp32 scalar per head): it is
+    # what prefill's chunk summaries emit and keeps the recurrent decode a
+    # pure continuation of the chunked scan.
     return {"m": jnp.zeros((batch, cfg.n_heads, dk, cfg.head_dim),
-                           jnp.float32)}
+                           jnp.float32),
+            "log_decay": jnp.zeros((batch, cfg.n_heads), jnp.float32)}
 
 
 def linear_decode(params, x, cache, ctx: Ctx):
     # ctx.positions carries the decode position → RoPE offset inside _qkv.
     q, k, v, log_a = _linear_qkv(params, x, ctx)   # S == 1
-    a = jnp.exp(log_a[..., 0]) if log_a is not None else 1.0
-    if log_a is not None:
-        a = a[..., None, None]
-    m = cache["m"] * a + jnp.einsum(
-        "bhsk,bhsv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
-    o = jnp.einsum("bhsk,bhkv->bhsv", q.astype(jnp.float32), m)
-    o = _heads_merge(o.astype(x.dtype))
+    o, m, ld = ops.linear_decode_op(
+        q[..., 0, :], k[..., 0, :], v[..., 0, :],
+        log_a[..., 0] if log_a is not None else None,
+        cache["m"], cache["log_decay"], backend=ctx.plan.backend)
+    o = _heads_merge(o[:, :, None, :].astype(x.dtype))
     y = o @ params["wo"].astype(x.dtype)
-    return y, {"m": m}
+    return y, {"m": m, "log_decay": ld}
 
 
 # ===========================================================================
@@ -365,6 +408,7 @@ def mamba2_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_len):
     gd = mb.ngroups * mb.d_state
     return {
         "m": jnp.zeros((batch, nh, mb.d_state, mb.headdim), jnp.float32),
+        "log_decay": jnp.zeros((batch, nh), jnp.float32),
         "conv_x": jnp.zeros((batch, mb.d_conv - 1, d_in), jnp.bfloat16),
         "conv_b": jnp.zeros((batch, mb.d_conv - 1, gd), jnp.bfloat16),
         "conv_c": jnp.zeros((batch, mb.d_conv - 1, gd), jnp.bfloat16),
@@ -376,10 +420,10 @@ def mamba2_decode(params, x, cache, ctx: Ctx):
     conv_caches = {"x": cache["conv_x"], "b": cache["conv_b"],
                    "c": cache["conv_c"]}
     q, k, v, log_a, xh, cc = _mamba_core(params, x, ctx, conv_caches)
-    a = jnp.exp(log_a[..., 0])[..., None, None]
-    m = cache["m"] * a + jnp.einsum(
-        "bhsk,bhsv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
-    y = jnp.einsum("bhsk,bhkv->bhsv", q.astype(jnp.float32), m)
+    y, m, ld = ops.linear_decode_op(
+        q[..., 0, :], k[..., 0, :], v[..., 0, :], log_a[..., 0],
+        cache["m"], cache["log_decay"], backend=ctx.plan.backend)
+    y = y[:, :, None, :]
     y = y.astype(x.dtype) + params["d_skip"][None, :, None, None
                                              ].astype(x.dtype) * xh
     y = _heads_merge(y)
@@ -387,7 +431,8 @@ def mamba2_decode(params, x, cache, ctx: Ctx):
     y = y * jax.nn.silu(z)
     y = rmsnorm(params["gnorm"], y, cfg.norm_eps)
     y = y @ params["wo"].astype(x.dtype)
-    new_cache = {"m": m, "conv_x": cc["x"].astype(jnp.bfloat16),
+    new_cache = {"m": m, "log_decay": ld,
+                 "conv_x": cc["x"].astype(jnp.bfloat16),
                  "conv_b": cc["b"].astype(jnp.bfloat16),
                  "conv_c": cc["c"].astype(jnp.bfloat16)}
     return y, new_cache
@@ -421,11 +466,10 @@ def hymba_apply(params, x, ctx: Ctx):
 
 
 def hymba_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_len):
-    win = spec.sliding_window or 2048
-    # window cache is enough for the sliding layers; global layers use the
-    # full length (we allocate max for simplicity at smoke scale; the
-    # dry-run configs allocate per-flag).
-    return {"attn": softmax_cache(cfg, spec, batch, max_len),
+    # hymba's global/local switch can be a per-group traced flag (dynamic
+    # single-position patterns), so the ring must cover the full length;
+    # statically-local layers still get the windowed ring via the mask.
+    return {"attn": softmax_cache(cfg, spec, batch, max_len, ring=max_len),
             "ssm": mamba2_cache(cfg, spec, batch, max_len)}
 
 
@@ -563,7 +607,7 @@ def moe_apply(params, x, ctx: Ctx):
             y, aux = _moe_dispatch(params_, x_, local_ctx)
             return y, jax.lax.pmean(aux, manual)
 
-        y, aux = jax.shard_map(
+        y, aux = _shard_map(
             body, mesh=plan.mesh, in_specs=(pspec, xspec),
             out_specs=(xspec, P()), axis_names=set(manual),
             check_vma=False)(params, x)
@@ -677,7 +721,8 @@ def layer_cache(cfg: ModelConfig, spec: LayerSpec, batch, max_len):
 
 def _softmax_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
     y = softmax_apply(params, x, ctx, window=spec.sliding_window)
-    cache = softmax_prefill_cache(params, x, ctx, max_len)
+    cache = softmax_prefill_cache(params, x, ctx, max_len,
+                                  ring=softmax_ring_len(spec, max_len))
     return y, cache
 
 
@@ -685,6 +730,7 @@ def _linear_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
     from repro.core.lasp2 import lasp2_with_state
     cfg, plan = ctx.cfg, ctx.plan
     q, k, v, log_a = _linear_qkv(params, x, ctx)
+    b, h = q.shape[0], q.shape[1]
     sp = plan.sp_for(q.shape[-2])
     if sp is not None:
         o, m = lasp2_with_state(q, k, v, log_a, sp=sp,
@@ -694,7 +740,9 @@ def _linear_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
             q, k, v, log_a, block_size=cfg.linear_attn.block_size,
             backend=plan.backend)
     y = _heads_merge(o.astype(x.dtype)) @ params["wo"].astype(x.dtype)
-    return y, {"m": m}
+    ld = (jnp.sum(log_a.astype(jnp.float32), axis=-1) if log_a is not None
+          else jnp.zeros((b, h), jnp.float32))
+    return y, {"m": m, "log_decay": ld}
 
 
 def _mamba2_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
@@ -714,7 +762,9 @@ def _mamba2_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
     z = x @ params["wz"].astype(x.dtype)
     y = rmsnorm(params["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
     y = y @ params["wo"].astype(x.dtype)
-    cache = {"m": m, "conv_x": cc["x"].astype(jnp.bfloat16),
+    cache = {"m": m,
+             "log_decay": jnp.sum(log_a.astype(jnp.float32), axis=-1),
+             "conv_x": cc["x"].astype(jnp.bfloat16),
              "conv_b": cc["b"].astype(jnp.bfloat16),
              "conv_c": cc["c"].astype(jnp.bfloat16)}
     return y, cache
@@ -723,7 +773,8 @@ def _mamba2_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
 def _hymba_prefill(params, x, ctx: Ctx, spec: LayerSpec, max_len):
     window = hymba_window(spec, ctx)
     a = softmax_apply(params["attn"], x, ctx, window=window)
-    ca = softmax_prefill_cache(params["attn"], x, ctx, max_len)
+    ca = softmax_prefill_cache(params["attn"], x, ctx, max_len,
+                               ring=max_len)
     s, cs = _mamba2_prefill(params["ssm"], x, ctx, spec, max_len)
     return 0.5 * (a + s), {"attn": ca, "ssm": cs}
 

@@ -174,28 +174,53 @@ def lm_loss(logits, labels, *, z_coef=0.0):
 # Decode (single token, cached)
 # ---------------------------------------------------------------------------
 
+def pad_safe(cfg: ModelConfig) -> bool:
+    """True if left-padded (length-bucketed) prefill is exact for this
+    config: every mixer is recurrent (state reset erases filler) and MLPs
+    are position-wise (no cross-token routing). With qkv biases, filler
+    columns turn nonzero after the first linear layer, so a downstream
+    mamba causal-conv could leak them into the first real tokens — exclude
+    that combination."""
+    mixers = {sp.mixer for sp in cfg.pattern}
+    if not all(sp.mixer in ("linear", "mamba2") and sp.mlp != "moe"
+               for sp in cfg.pattern):
+        return False
+    return not (cfg.qkv_bias and "mamba2" in mixers)
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache: per linear/SSM layer a constant-size fp32 state (+
+    cumulative log decay), per softmax layer a ring-buffer KV cache (ring =
+    sliding window for the windowed layers of LASP-2H hybrids). ``pos`` is
+    per-row — rows of a continuously-batched decode sit at different
+    offsets."""
     caches = []
     for spec in cfg.pattern:
         c = blocks.layer_cache(cfg, spec, batch, max_len)
         caches.append(jax.tree.map(
             lambda x: jnp.zeros((cfg.n_groups,) + x.shape, x.dtype), c))
-    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+    return {"layers": caches, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
 def decode_step(params, token, cache, cfg: ModelConfig,
                 plan: Optional[Parallelism] = None, *, img_emb=None,
                 enc_out=None, unroll=False):
-    """One decode step. token: (B,) int32 → (logits (B, V), new cache)."""
+    """One decode step. token: (B,) int32 → (logits (B, V), new cache).
+
+    ``cache["pos"]`` may be a scalar (legacy, all rows aligned) or a (B,)
+    vector of per-row positions (continuous batching). No prefix re-scan:
+    linear/SSM layers advance their recurrent state by one
+    ``recurrent_step``, softmax layers write one ring slot."""
     plan = plan or local_plan()
     dtype = jnp.dtype(cfg.dtype)
     pos = cache["pos"]
     x = embed_lookup(params["embed"], token[:, None], dtype)
     x = plan.act(x, "batch", None, None)
 
+    # RoPE positions: (1,) broadcast for scalar pos, else per-row (B, 1).
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
     flags = hymba_global_flags(cfg) \
         if any(sp.mixer == "hymba" for sp in cfg.pattern) else None
-    ctx = Ctx(cfg=cfg, plan=plan, positions=jnp.atleast_1d(pos),
+    ctx = Ctx(cfg=cfg, plan=plan, positions=positions,
               img_emb=img_emb, enc_out=enc_out, causal=True,
               decode_pos=pos)
 
@@ -230,12 +255,21 @@ def decode_step(params, token, cache, cfg: ModelConfig,
 
 def prefill(params, tokens, cfg: ModelConfig,
             plan: Optional[Parallelism] = None, *, max_len=None,
-            img_emb=None, enc_frames=None, unroll=False):
+            img_emb=None, enc_frames=None, unroll=False, pad_lens=None):
     """Run the prompt, returning (logits of last position, decode cache).
 
     Implemented as forward + a per-layer cache-extraction pass; the mixers'
-    prefill paths reuse the exact same kernels as forward (tested equal to
-    running decode token-by-token).
+    prefill paths reuse the exact same chunked-scan kernels as forward
+    (tested equal to running decode token-by-token), and the final
+    per-layer recurrent states land directly in the cache.
+
+    ``pad_lens`` (B,) enables length-bucketed batched prefill for pure
+    linear/SSM stacks: row ``b`` is LEFT-padded with ``pad_lens[b]`` filler
+    tokens, per-row positions start at ``-pad_lens[b]`` so real tokens sit
+    at 0..L-1, and a state reset (``RESET_LOG_A``) at the first real token
+    erases the filler's contribution to the recurrent state. Only valid
+    when no layer does softmax attention over the text sequence (softmax
+    layers would attend the filler).
     """
     plan = plan or local_plan()
     dtype = jnp.dtype(cfg.dtype)
@@ -243,7 +277,22 @@ def prefill(params, tokens, cfg: ModelConfig,
     max_len = max_len or s
     x = embed_lookup(params["embed"], tokens, dtype)
     x = plan.act(x, "batch", "seq", None)
-    positions = jnp.arange(s)
+    resets = None
+    if pad_lens is not None:
+        if not pad_safe(cfg):
+            raise ValueError(
+                "pad_lens prefill requires a pure linear/SSM stack with "
+                "dense MLPs (softmax layers would attend the filler; MoE "
+                "routing lets filler tokens steal expert capacity)")
+        cols = jnp.arange(s)[None, :]
+        positions = cols - pad_lens[:, None]                     # (B, S)
+        resets = cols == pad_lens[:, None]
+        # Zero filler embeddings so the mamba causal-conv sees the same
+        # zeros it would for an unpadded sequence start; linear-state
+        # leakage is erased by the reset at the first real token.
+        x = jnp.where((cols >= pad_lens[:, None])[..., None], x, 0)
+    else:
+        positions = jnp.arange(s)
 
     enc_out = None
     if cfg.encoder is not None:
@@ -252,7 +301,7 @@ def prefill(params, tokens, cfg: ModelConfig,
     flags = hymba_global_flags(cfg) \
         if any(sp.mixer == "hymba" for sp in cfg.pattern) else None
     ctx = Ctx(cfg=cfg, plan=plan, positions=positions, img_emb=img_emb,
-              enc_out=enc_out, causal=True)
+              enc_out=enc_out, causal=True, resets=resets)
 
     def body(carry, xs):
         x_ = carry
@@ -272,6 +321,8 @@ def prefill(params, tokens, cfg: ModelConfig,
                                    unroll=True if unroll else 1)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_out(params["embed"], x[:, -1:, :], plan, cfg.vocab_size)
-    cache = {"layers": list(layer_caches),
-             "pos": jnp.full((), s, jnp.int32)}
+    pos = jnp.full((b,), s, jnp.int32)
+    if pad_lens is not None:
+        pos = pos - pad_lens            # per-row true prompt lengths
+    cache = {"layers": list(layer_caches), "pos": pos}
     return logits[:, 0, :], cache

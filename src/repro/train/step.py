@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map as _shard_map
+
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import model as M
 from repro.optim import adamw
@@ -123,7 +125,7 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, plan: Parallelism):
                 return g, jax.lax.pmean(ce, "pod"), new_err
 
             nb = jax.tree.map(lambda x: P(None, "pod"), batch)
-            grads, ce, new_err = jax.shard_map(
+            grads, ce, new_err = _shard_map(
                 body, mesh=plan.mesh,
                 in_specs=(P(), nb, P()), out_specs=(P(), P(), P()),
                 axis_names={"pod"}, check_vma=False)(

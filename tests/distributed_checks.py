@@ -19,6 +19,8 @@ import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.core.compat import shard_map as _shard_map
+
 from repro.core import linear_attention as la               # noqa: E402
 from repro.core.baselines import (lasp1, megatron_sp_attention,  # noqa: E402
                                   ring_attention)
@@ -38,8 +40,9 @@ def check(name):
     return deco
 
 
-mesh1d = jax.make_mesh((8,), ("data",),
-                       axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import auto_axis_types
+
+mesh1d = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
 sp = SPConfig(mesh=mesh1d, sp_axis="data")
 key = jax.random.PRNGKey(1)
 B, H, S, dk, dv = 2, 4, 512, 32, 64
@@ -254,7 +257,7 @@ def _():
         s, e = compress_sync_tree(g_[0], e_[0], pod_axis="pod")
         return s, e[None]
 
-    synced, err = jax.jit(jax.shard_map(
+    synced, err = jax.jit(_shard_map(
         body, mesh=mesh, in_specs=(P("pod"), P("pod")),
         out_specs=(P(), P("pod")), axis_names={"pod"}, check_vma=False))(
             gs, e0)
@@ -276,7 +279,8 @@ def _():
                       cfg_override=get_smoke("hymba-1.5b"))
     compiled = cell.lower().compile()
     assert compiled.memory_analysis() is not None
-    assert (compiled.cost_analysis() or {}).get("flops", 0) > 0
+    from repro.core.compat import cost_analysis
+    assert cost_analysis(compiled).get("flops", 0) > 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Documentation suite invariants: cross-references must resolve."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_doc_cross_references_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_links.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_required_docs_exist():
+    # EXPERIMENTS.md is referenced by src docstrings (core/lasp2.py etc.)
+    for name in ("README.md", "EXPERIMENTS.md", "docs/algorithms.md",
+                 "pyproject.toml", ".github/workflows/ci.yml"):
+        assert (ROOT / name).exists(), f"missing {name}"

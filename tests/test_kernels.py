@@ -55,6 +55,57 @@ def test_flash_kernel_sweep(rng, sq, sk, hq, hkv, dh, dtype, causal,
                                np.asarray(oref, np.float32), rtol=t, atol=t)
 
 
+@pytest.mark.parametrize("dk,dv", [(32, 32), (64, 128), (128, 64)])
+@pytest.mark.parametrize("decay", [False, True])
+def test_lasp2_decode_kernel_sweep(rng, dk, dv, decay):
+    """Single-step recurrent decode kernel == oracle recurrence, and
+    chaining steps from a chunked-prefill state continues the scan."""
+    from repro.core import linear_attention as la
+    from repro.kernels.lasp2_chunk import lasp2_chunk_fwd
+
+    bh, s, split = 4, 32, 24
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (bh, s, dk)) * 0.3
+    k = jax.random.normal(ks[1], (bh, s, dk)) * 0.3
+    v = jax.random.normal(ks[2], (bh, s, dv)) * 0.5
+    la_ = (-jnp.abs(jax.random.normal(ks[3], (bh, s))) * 0.05) if decay \
+        else jnp.zeros((bh, s))
+    ref = la.sequential_oracle(q, k, v, la_)
+    # prefill the first `split` tokens with the chunked kernel...
+    _, st, ld = lasp2_chunk_fwd(q[:, :split], k[:, :split], v[:, :split],
+                                la_[:, :split], block_size=8,
+                                interpret=True)
+    # ...then decode the rest one step at a time
+    from repro.kernels.lasp2_decode import lasp2_decode_step
+    outs = []
+    for t in range(split, s):
+        o, st, ld = lasp2_decode_step(q[:, t], k[:, t], v[:, t], la_[:, t],
+                                      st, ld, interpret=True)
+        outs.append(o)
+    o_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(o_dec, np.asarray(ref.o)[:, split:],
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(st, ref.state, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(ld, ref.log_decay, rtol=1e-5, atol=1e-5)
+
+
+def test_linear_decode_op_dispatch(rng):
+    ks = jax.random.split(rng, 4)
+    b, h, dk, dv = 2, 4, 32, 64
+    q = jax.random.normal(ks[0], (b, h, dk)) * 0.3
+    k = jax.random.normal(ks[1], (b, h, dk)) * 0.3
+    v = jax.random.normal(ks[2], (b, h, dv)) * 0.5
+    la_ = -jnp.abs(jax.random.normal(ks[3], (b, h))) * 0.05
+    st = jax.random.normal(ks[0], (b, h, dk, dv)).astype(jnp.float32)
+    ld = jnp.zeros((b, h), jnp.float32)
+    o1, s1, l1 = ops.linear_decode_op(q, k, v, la_, st, ld, backend="xla")
+    o2, s2, l2 = ops.linear_decode_op(q, k, v, la_, st, ld,
+                                      backend="interpret")
+    np.testing.assert_allclose(o1, o2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)
+
+
 def test_ops_dispatch_linear(rng):
     ks = jax.random.split(rng, 3)
     q = jax.random.normal(ks[0], (2, 4, 256, 32)) * 0.3
@@ -64,6 +115,26 @@ def test_ops_dispatch_linear(rng):
     o_int, st_int, _ = ops.linear_attention_op(q, k, v, backend="interpret")
     np.testing.assert_allclose(o_xla, o_int, rtol=3e-4, atol=3e-4)
     np.testing.assert_allclose(st_xla, st_int, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("s", [17, 129, 251])
+def test_ops_linear_awkward_lengths(rng, s):
+    """Arbitrary (incl. prime) prompt lengths must keep full-size blocks
+    via zero right-padding — output, state and log decay stay exact."""
+    from repro.core import linear_attention as la
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (1, 2, s, 16)) * 0.3
+    k = jax.random.normal(ks[1], (1, 2, s, 16)) * 0.3
+    v = jax.random.normal(ks[2], (1, 2, s, 24)) * 0.5
+    la_ = -jnp.abs(jax.random.normal(ks[3], (1, 2, s))) * 0.05
+    ref = la.sequential_oracle(q, k, v, la_)
+    for backend in ("xla", "interpret"):
+        o, st, ld = ops.linear_attention_op(q, k, v, la_, block_size=128,
+                                            backend=backend)
+        assert o.shape[-2] == s
+        np.testing.assert_allclose(o, ref.o, rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(st, ref.state, rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(ld, ref.log_decay, rtol=1e-5, atol=1e-5)
 
 
 def test_ops_dispatch_flash(rng):

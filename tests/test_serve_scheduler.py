@@ -1,0 +1,91 @@
+"""Continuous-batching scheduler unit tests (pure slot bookkeeping)."""
+
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import ContinuousScheduler, bucket_length
+
+
+def _sched(**kw):
+    return ContinuousScheduler(max_batch=4, max_len=128, **kw)
+
+
+def test_bucket_length_powers_of_two():
+    assert bucket_length(1) == 16          # floor
+    assert bucket_length(16) == 16
+    assert bucket_length(17) == 32
+    assert bucket_length(100) == 128
+
+
+def test_admission_respects_free_slots():
+    s = _sched()
+    for i in range(6):
+        s.submit(np.arange(8), 4)
+    batches = s.admit()
+    admitted = sum(len(b.requests) for b in batches)
+    assert admitted == 4                   # grid is full
+    assert len(s.waiting) == 2
+    assert not s.free_slots()
+    assert s.admit() == []                 # no free slots -> no admission
+
+
+def test_admission_groups_by_length_and_buckets():
+    s = _sched()
+    s.submit(np.arange(8), 4)
+    s.submit(np.arange(12), 4)
+    s.submit(np.arange(8), 4)
+    batches = s.admit()
+    sizes = sorted(b.prompts.shape for b in batches)
+    assert sizes == [(1, 12), (2, 8)]      # exact-length groups
+    assert all(not b.padded for b in batches)
+
+    s2 = _sched(bucket_lengths=True)
+    s2.submit(np.arange(8), 4)
+    s2.submit(np.arange(12), 4)
+    (b,) = s2.admit()                      # both land in the 16-bucket
+    assert b.prompts.shape == (2, 16)
+    np.testing.assert_array_equal(b.pad_lens, [8, 4])
+    # left-padded: real tokens right-aligned
+    np.testing.assert_array_equal(b.prompts[0, 8:], np.arange(8))
+    np.testing.assert_array_equal(b.prompts[0, :8], 0)
+
+
+def test_eviction_frees_slots_for_waiting_requests():
+    s = _sched()
+    for i in range(5):
+        s.submit(np.arange(4), max_new_tokens=2, eos_id=99)
+    (b,) = s.admit()
+    # slot 0 hits EOS on its first (prefill-sampled) token
+    finished = s.record_prefill(b, np.array([99, 1, 1, 1]))
+    assert [r.slot for r in finished] == [0]
+    assert finished[0].finish_reason == "eos"
+    assert s.free_slots() == [0]
+    (b2,) = s.admit()                      # waiting request takes slot 0
+    assert list(b2.slots) == [0]
+    # remaining three finish by length budget on the next decode step
+    done = s.record_step(np.array([5, 5, 5, 5]))
+    assert {r.finish_reason for r in done} == {"length"}
+    assert len(s.free_slots()) == 3
+    assert not s.waiting
+
+
+def test_submit_rejects_overlong_requests():
+    s = _sched()
+    with pytest.raises(ValueError):
+        s.submit(np.arange(120), max_new_tokens=16)
+
+
+def test_submit_rejects_degenerate_requests():
+    s = _sched()
+    with pytest.raises(ValueError):
+        s.submit(np.array([], np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError):
+        s.submit(np.arange(8), max_new_tokens=0)
+
+
+def test_fifo_admission_order():
+    s = _sched()
+    uids = [s.submit(np.arange(8), 4) for _ in range(6)]
+    (b,) = s.admit()
+    assert [r.uid for r in b.requests] == uids[:4]
+    assert [r.uid for r in s.waiting] == uids[4:]
