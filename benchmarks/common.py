@@ -16,6 +16,7 @@ import sys
 import time
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def timeit(fn, *args, iters=5, warmup=2):
@@ -27,6 +28,35 @@ def timeit(fn, *args, iters=5, warmup=2):
         out = fn(*args)
     _block(out)
     return (time.perf_counter() - t0) / iters
+
+
+def percentile(xs, p):
+    """Nearest-rank percentile of a non-empty list — shared with the
+    bench subprocess payloads (run_subprocess_bench puts the repo root on
+    the subprocess path) so the median/p90 policy lives in one place."""
+    xs = sorted(xs)
+    idx = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+def write_bench_json(name: str, payload) -> str:
+    """Write BENCH_<name>.json at the repo root — the machine-readable
+    artifact CI uploads so the perf trajectory is tracked across PRs.
+    ``payload``: dict (preferred: {"rows": [...], ...stats}) or a list of
+    (name, us_per_call, derived) CSV rows."""
+    if not isinstance(payload, dict):
+        payload = {"rows": [
+            {"name": n, "us_per_call": us, "derived": derived}
+            for n, us, derived in payload]}
+    payload = dict(payload)
+    payload.setdefault("bench", name)
+    payload.setdefault("schema_version", 1)
+    path = os.path.join(ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.relpath(path, ROOT)}", file=sys.stderr)
+    return path
 
 
 def _block(out):
@@ -43,7 +73,8 @@ def run_subprocess_bench(code: str, *, devices: int = 8,
         "import os\n"
         f"os.environ['XLA_FLAGS'] = "
         f"'--xla_force_host_platform_device_count={devices}'\n"
-        f"import sys; sys.path.insert(0, {SRC!r})\n")
+        f"import sys; sys.path.insert(0, {SRC!r})\n"
+        f"sys.path.insert(0, {ROOT!r})\n")   # benchmarks.common importable
     proc = subprocess.run([sys.executable, "-c", prelude + code],
                           capture_output=True, text=True, timeout=timeout)
     if proc.returncode != 0:

@@ -1,26 +1,34 @@
 """Paper Fig. 3: SP-method speed comparison (LASP-2 vs LASP-1 vs Ring
 Attention vs Megatron-SP).
 
-Measured: wall-clock of each SP method's attention layer on 8 virtual
-devices, sequence lengths 8K→64K (CPU-indicative). Derived: the paper
-§3.4 communication model at the paper's scale (64 GPUs, 2048K tokens):
-communication steps per iteration and traffic per device per layer.
+Measured: wall-clock (median/p90 per call) of each SP method's attention
+layer on 8 virtual devices, sequence lengths 8K→32K (CPU-indicative),
+plus the bytes each method puts on the wire from the comm subsystem's
+CommRecord tape. Derived: the paper §3.4 communication model at the
+paper's scale (64 GPUs, 2048K tokens): communication steps per iteration
+and traffic per device per layer. Emits ``BENCH_fig3_speed.json``.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, run_subprocess_bench
+from benchmarks.common import emit, run_subprocess_bench, write_bench_json
+
+BENCH_NAME = "fig3_speed"
 
 _CODE = r"""
 import json, time
 import jax, jax.numpy as jnp
 from repro.core.lasp2 import lasp2, SPConfig
 from repro.core.baselines import lasp1, ring_attention, megatron_sp_attention
+from repro.comm import tape, tape_summary
 
 from repro.launch.mesh import auto_axis_types
 mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
 sp = SPConfig(mesh=mesh, sp_axis="data")
 B, H, d = 1, 8, 64
+
+from benchmarks.common import percentile
+
 res = {}
 for S in (8192, 16384, 32768):
     key = jax.random.PRNGKey(0)
@@ -36,13 +44,21 @@ for S in (8192, 16384, 32768):
         fns["ring_attention"] = jax.jit(lambda a,b,c: ring_attention(a,b,c, sp=sp))
         fns["megatron_sp"] = jax.jit(lambda a,b,c: megatron_sp_attention(a,b,c, sp=sp))
     for name, f in fns.items():
+        with tape() as recs:
+            f.lower(q, k, v)
         f(q, k, v)[0].block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(3):
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
             out = f(q, k, v)
-        out.block_until_ready()
-        dt = (time.perf_counter() - t0) / 3
-        res[f"{name}@{S}"] = dt * 1e6
+            out.block_until_ready()
+            times.append((time.perf_counter() - t0) * 1e6)
+        res[f"{name}@{S}"] = {
+            "median_us": percentile(times, 50),
+            "p90_us": percentile(times, 90),
+            "comm_bytes": tape_summary(recs).get("total_bytes", 0),
+            "comm_steps": tape_summary(recs).get("total_steps", 0),
+        }
 print(json.dumps(res))
 """
 
@@ -72,13 +88,23 @@ def analytic_rows():
 def main():
     rows = []
     res = run_subprocess_bench(_CODE, devices=8, timeout=2400)
-    for k, us in sorted(res.items()):
-        rows.append((f"fig3/{k}", us, "tokens/s="
-                     + str(round(int(k.split("@")[1]) / (us / 1e6)))))
+    for k, stats in sorted(res.items()):
+        us = stats["median_us"]
+        rows.append((f"fig3/{k}", us,
+                     "tokens/s="
+                     + str(round(int(k.split("@")[1]) / (us / 1e6)))
+                     + f";p90={stats['p90_us']:.0f}us"
+                     + f";bytes={stats['comm_bytes']}"))
     rows += [(f"fig3/{n}", u, d) for n, u, d in analytic_rows()]
     emit(rows)
-    return rows
+    # benchmarks.run writes BENCH_fig3_speed.json from this payload (the
+    # __main__ path below covers standalone invocation)
+    return {
+        "measured": res,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
 
 
 if __name__ == "__main__":
-    main()
+    write_bench_json(BENCH_NAME, main())

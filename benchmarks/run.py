@@ -2,9 +2,13 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only fig3,table2,...]
 
-Prints ``name,us_per_call,derived`` CSV rows per bench. Wall-clock values
-are CPU-indicative; the ``derived`` column carries the quantity each paper
-table is about (loss / traffic / memory / comm steps).
+Prints ``name,us_per_call,derived`` CSV rows per bench and writes a
+machine-readable ``BENCH_<name>.json`` at the repo root for every bench
+whose ``main()`` returns a payload (all of them) — median/p90 wall
+times where the bench measures them (``fig3_speed``,
+``comm_strategies``) plus the derived analytic quantities. CI uploads
+the ``BENCH_*.json`` files as artifacts so the perf trajectory is
+tracked across PRs (see docs/communication.md for the comm schema).
 """
 
 from __future__ import annotations
@@ -14,9 +18,11 @@ import sys
 import time
 import traceback
 
-BENCHES = ["fig3_speed", "table2_convergence", "table3_bidirectional",
-           "table4_hybrid_ratio", "table5_gather_splits",
-           "table6_scalability"]
+from benchmarks.common import write_bench_json
+
+BENCHES = ["fig3_speed", "comm_strategies", "table2_convergence",
+           "table3_bidirectional", "table4_hybrid_ratio",
+           "table5_gather_splits", "table6_scalability"]
 
 
 def main() -> None:
@@ -34,7 +40,9 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            payload = mod.main()
+            if payload is not None:
+                write_bench_json(getattr(mod, "BENCH_NAME", name), payload)
             print(f"# {name}: done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001

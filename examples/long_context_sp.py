@@ -27,8 +27,7 @@ from repro.core.baselines import lasp1, megatron_sp_attention
 from repro.core.lasp2 import SPConfig, lasp2
 
 
-def collective_report(fn, *args):
-    txt = jax.jit(fn).lower(*args).compile().as_text()
+def collective_report(txt):
     ops = {}
     for op in ("all-gather", "all-reduce", "reduce-scatter",
                "collective-permute", "all-to-all"):
@@ -40,8 +39,8 @@ def collective_report(fn, *args):
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import auto_axis_types
+    mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
     sp = SPConfig(mesh=mesh, sp_axis="data")
     B, H, S, d = 1, 8, 65536, 64
     key = jax.random.PRNGKey(0)
@@ -60,16 +59,25 @@ def main():
     print(f"LASP-2 sharded == local: max rel Δ = {rel:.2e} "
           f"(bf16 I/O, fp32 state)\n")
 
-    for name, fn in [
+    from repro.comm import assert_budget, lasp2_budget, ring_baseline_budget
+
+    for name, fn, budget in [
         ("LASP-2 (AllGather of M_t)",
-         lambda a, b, c: lasp2(a, b, c, sp=sp)),
+         lambda a, b, c: lasp2(a, b, c, sp=sp),
+         lasp2_budget("allgather", sp.degree)),
         ("LASP-1 (ring P2P)",
-         lambda a, b, c: lasp1(a, b, c, sp=sp)),
+         lambda a, b, c: lasp1(a, b, c, sp=sp),
+         ring_baseline_budget(sp.degree)),
         ("Megatron-SP (AllGather activations)",
-         lambda a, b, c: megatron_sp_attention(a, b, c, sp=sp)),
+         lambda a, b, c: megatron_sp_attention(a, b, c, sp=sp),
+         None),
     ]:
-        ops, loop = collective_report(fn, q, k, v)
-        print(f"{name:40s} collectives={ops} sequential-loop={loop}")
+        txt = jax.jit(fn).lower(q, k, v).compile().as_text()
+        ops, loop = collective_report(txt)
+        if budget is not None:   # HLO-verified (repro/comm/budget.py)
+            assert_budget(txt, budget, sp.degree)
+        print(f"{name:40s} collectives={ops} sequential-loop={loop} "
+              f"budget={'verified' if budget else 'n/a'}")
 
     print("\nLASP-2's gather moves H·dk·dv state bytes — independent of the"
           "\n65536-token sequence; Megatron-SP's gather scales with S.")

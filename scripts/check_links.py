@@ -3,8 +3,11 @@
 
 Verifies that (a) every relative markdown link / image in README.md,
 docs/**.md, and the other top-level *.md files points at a file that
-exists, and (b) every `path/to/file.py`-style inline-code reference to a
-repo file resolves. External (http/…) links are not fetched.
+exists, (b) every `path/to/file.py`-style inline-code reference to a
+repo file resolves, and (c) every ``python -m dotted.module`` invocation
+quoted in the docs resolves to a module file (so quickstart commands
+like ``python -m benchmarks.comm_strategies`` can't silently rot).
+External (http/…) links are not fetched.
 
   python scripts/check_links.py        # exit 1 + report on broken refs
 """
@@ -20,13 +23,30 @@ ROOT = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
 CODEPATH_RE = re.compile(
     r"`([A-Za-z0-9_.-]+(?:/[A-Za-z0-9_.*-]+)+\.(?:py|md|toml|yml|json))`")
+MODULE_RE = re.compile(r"python\s+-m\s+([A-Za-z_][A-Za-z0-9_.]*)")
 
 
 SKIP = {"ISSUE.md"}          # transient per-PR task file, not docs
 
 # Inline-code refs may be written relative to any of these roots
-# (prose shorthand like `core/lasp2.py` means src/repro/core/lasp2.py).
-CODE_ROOTS = ("", "src", "src/repro")
+# (prose shorthand like `core/lasp2.py` means src/repro/core/lasp2.py;
+# `.github` so workflow files can be referenced as `workflows/ci.yml`).
+CODE_ROOTS = ("", "src", "src/repro", ".github")
+
+# ``python -m`` module roots (mirrors how PYTHONPATH=src is used).
+MODULE_ROOTS = ("", "src")
+
+
+def module_resolves(dotted: str) -> bool:
+    top = dotted.split(".")[0]
+    if not any((ROOT / r / top).is_dir() or (ROOT / r / f"{top}.py").exists()
+               for r in MODULE_ROOTS):
+        return True      # external tool (pytest, pip, …) — not ours to check
+    rel = dotted.replace(".", "/")
+    return any((ROOT / r / rel).with_suffix(".py").exists()
+               or (ROOT / r / rel / "__main__.py").exists()
+               or (ROOT / r / rel / "__init__.py").exists()
+               for r in MODULE_ROOTS)
 
 
 def md_files():
@@ -54,6 +74,12 @@ def check_file(md: Path):
             if not ok:
                 errors.append(f"{md.relative_to(ROOT)}:{line}: "
                               f"broken {kind} -> {target}")
+    for m in MODULE_RE.finditer(text):
+        dotted = m.group(1)
+        if not module_resolves(dotted):
+            line = text[:m.start()].count("\n") + 1
+            errors.append(f"{md.relative_to(ROOT)}:{line}: "
+                          f"broken module ref -> python -m {dotted}")
     return errors
 
 

@@ -1,0 +1,32 @@
+"""Pluggable SP communication subsystem.
+
+Every cross-device exchange the sequence-parallel layers perform goes
+through this package:
+
+* :mod:`repro.comm.primitives` — named collectives (``allgather_states``,
+  ``ring_sendrecv``, ``reduce_scatter_grads``, the ZeCO-style
+  ``pipelined_prefix_exchange``), each recording a :class:`CommRecord`
+  of bytes/steps onto an ambient trace-time tape.
+* :mod:`repro.comm.strategy` — the pluggable exchange strategies for the
+  LASP-2 inter-chunk state ("allgather" | "ring" | "pipelined").
+* :mod:`repro.comm.overlap` — the double-buffered comm/compute overlap
+  scheduler (``overlap`` vs ``none`` for A/B benchmarking).
+* :mod:`repro.comm.budget` — HLO-verified collective budgets: assert the
+  exact collective count/volume a strategy is allowed to put on the wire.
+
+See docs/communication.md for the strategy matrix and overlap timeline.
+"""
+
+from repro.comm.primitives import (CommRecord, allgather_states,  # noqa: F401
+                                   auto_slices, pipelined_prefix_exchange,
+                                   reduce_scatter_grads, ring_sendrecv,
+                                   tape, tape_summary)
+from repro.comm.overlap import DoubleBufferedScheduler   # noqa: F401
+from repro.comm.strategy import (PrefixExchange, get_strategy,  # noqa: F401
+                                 pack_state, unpack_state)
+from repro.comm.budget import (CollectiveBudget, assert_budget,  # noqa: F401
+                               check_budget, lasp2_budget,
+                               ring_baseline_budget)
+
+STRATEGY_NAMES = ("allgather", "ring", "pipelined")
+OVERLAP_MODES = ("overlap", "none")

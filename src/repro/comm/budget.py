@@ -1,0 +1,125 @@
+"""HLO-verified collective budgets.
+
+The paper's claims are *counts*: LASP-2 does exactly one forward
+AllGather of sequence-length-independent state; LASP-1's ring does
+2(W-1) sequential permutes per fwd+bwd. A :class:`CollectiveBudget` is
+that claim written down; :func:`assert_budget` proves it against the
+compiled (post-SPMD) HLO via ``repro.launch.hlo_analysis`` — not against
+what the Python source *intended* to emit. Tests in
+``tests/comm_checks.py`` pin every strategy to its budget.
+
+Caveat inherited from ``parse_collectives``: ops inside ``while`` bodies
+(scans/fori_loops) appear once in HLO. The ring strategies are therefore
+UNROLLED (static mesh degree) so their W-1 hops are literally countable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+from repro.launch.hlo_analysis import (_COLL_OPS, collective_counts,
+                                       parse_collectives)
+
+
+@dataclass(frozen=True)
+class CollectiveBudget:
+    """Exact expected instruction counts; unlisted collective ops must be
+    absent (strict=True) or are ignored (strict=False)."""
+
+    counts: Mapping[str, int]
+    strict: bool = True
+    # optional per-op ceiling on summed per-device traffic bytes
+    max_traffic: Mapping[str, float] = field(default_factory=dict)
+    note: str = ""
+
+
+def lasp2_budget(strategy: str, world: int, *, with_grad: bool = False,
+                 backward: str = "faithful",
+                 n_slices: int = 1) -> CollectiveBudget:
+    """What one LASP-2 layer is allowed to put on the wire.
+
+    forward only:
+      allgather → exactly 1 all-gather (the packed M‖A states)
+      ring      → W-1 collective-permutes
+      pipelined → n_slices·(W-1) collective-permutes (1/n_slices size)
+    with_grad adds the strategy's backward:
+      allgather faithful → +1 all-gather (Alg. 4's dM gather)
+      allgather autodiff → +1 reduce-scatter (AD transpose of the gather)
+      ring/pipelined     → the permutes transpose 1:1 (total doubles)
+    """
+    if strategy == "allgather":
+        if not with_grad:
+            return CollectiveBudget({"all-gather": 1})
+        if backward == "faithful":
+            return CollectiveBudget({"all-gather": 2},
+                                    note="paper Alg. 2+4: fwd + dM gathers")
+        return CollectiveBudget({"all-gather": 1, "reduce-scatter": 1},
+                                note="autodiff: RS is the gather transpose")
+    if strategy in ("ring", "pipelined"):
+        per_pass = n_slices * (world - 1)
+        n = 2 * per_pass if with_grad else per_pass
+        return CollectiveBudget({"collective-permute": n})
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def ring_baseline_budget(world: int, *,
+                         with_grad: bool = False) -> CollectiveBudget:
+    """LASP-1 baseline (paper Alg. 5/6): W-1 permutes per pass — the
+    2(W-1) sequential steps per iteration LASP-2 removes."""
+    n = (world - 1) * (2 if with_grad else 1)
+    return CollectiveBudget({"collective-permute": n})
+
+
+def check_budget(hlo_text: str, budget: CollectiveBudget,
+                 total_devices: int) -> List[str]:
+    """Return human-readable violations (empty list = within budget)."""
+    counts = collective_counts(hlo_text, total_devices)
+    violations = []
+    for op, expected in budget.counts.items():
+        got = counts.get(op, 0)
+        if got != expected:
+            violations.append(f"{op}: expected exactly {expected}, "
+                              f"compiled HLO has {got}")
+    if budget.strict:
+        for op in _COLL_OPS:
+            if op not in budget.counts and counts.get(op, 0):
+                violations.append(f"{op}: expected none, compiled HLO has "
+                                  f"{counts[op]}")
+    if budget.max_traffic:
+        by_op: Dict[str, float] = {}
+        for c in parse_collectives(hlo_text, total_devices):
+            by_op[c.op] = by_op.get(c.op, 0.0) + c.traffic_bytes
+        for op, ceiling in budget.max_traffic.items():
+            if by_op.get(op, 0.0) > ceiling:
+                violations.append(
+                    f"{op}: traffic {by_op.get(op, 0.0):.0f}B exceeds "
+                    f"budget {ceiling:.0f}B")
+    return violations
+
+
+def assert_budget(hlo_text: str, budget: CollectiveBudget,
+                  total_devices: int) -> None:
+    violations = check_budget(hlo_text, budget, total_devices)
+    if violations:
+        note = f" ({budget.note})" if budget.note else ""
+        raise AssertionError(
+            "collective budget violated" + note + ":\n  "
+            + "\n  ".join(violations))
+
+
+def compiled_hlo(fn, *args, static_argnums=()) -> str:
+    """Compiled (post-SPMD) HLO text of ``jit(fn)(*args)``."""
+    import jax
+    return jax.jit(fn, static_argnums=static_argnums).lower(
+        *args).compile().as_text()
+
+
+def gather_result_bytes(hlo_text: str, total_devices: int,
+                        op: str = "all-gather") -> Optional[int]:
+    """Result size of the largest ``op`` in the module — used to pin the
+    state gather to its expected W·(dk·dv+1)-scalar volume."""
+    sizes = [c.result_bytes for c in parse_collectives(hlo_text,
+                                                       total_devices)
+             if c.op == op]
+    return max(sizes) if sizes else None

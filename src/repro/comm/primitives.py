@@ -1,0 +1,192 @@
+"""Named SP collectives with trace-time communication accounting.
+
+Each primitive performs exactly one logical exchange via the matching
+``jax.lax`` collective and appends a :class:`CommRecord` to the ambient
+tape (:func:`tape`): the op name, the per-device wire traffic under the
+standard ring cost model (the same model ``repro.launch.hlo_analysis``
+applies to compiled HLO), and the number of *sequential* exchange steps
+the call represents. Records are computed from static shapes at trace
+time, so wrapping ``jax.jit(fn).lower(...)`` in a tape captures a
+program's full communication budget without running it:
+
+    with comm.tape() as records:
+        jax.jit(step).lower(batch)
+    bytes_on_wire = sum(r.traffic_bytes for r in records)
+
+The tape is advisory (benchmarks, reports); the *enforced* budget checks
+parse compiled HLO instead (:mod:`repro.comm.budget`), so the two views
+cross-validate each other.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+_TAPE = threading.local()
+
+
+@dataclass(frozen=True)
+class CommRecord:
+    """One collective issued by an SP layer (static, trace-time)."""
+
+    op: str              # all-gather | collective-permute | reduce-scatter
+    payload_bytes: int   # bytes entering the collective, per device
+    traffic_bytes: int   # per-device wire traffic (ring cost model)
+    steps: int           # sequential exchange steps this call represents
+    group: int           # devices participating
+    tag: str = ""        # call-site label, e.g. "lasp2.states"
+
+
+@contextmanager
+def tape():
+    """Collect CommRecords from every primitive traced inside the block."""
+    prev = getattr(_TAPE, "records", None)
+    _TAPE.records = []
+    try:
+        yield _TAPE.records
+    finally:
+        _TAPE.records = prev
+
+
+def _record(rec: CommRecord) -> None:
+    records = getattr(_TAPE, "records", None)
+    if records is not None:
+        records.append(rec)
+
+
+def tape_summary(records: List[CommRecord]) -> Dict[str, float]:
+    """Totals per op + overall, mirroring hlo_analysis.collective_summary."""
+    out: Dict[str, float] = {}
+    for r in records:
+        out[r.op] = out.get(r.op, 0) + r.traffic_bytes
+        out[f"{r.op}_count"] = out.get(f"{r.op}_count", 0) + 1
+        out[f"{r.op}_steps"] = out.get(f"{r.op}_steps", 0) + r.steps
+    out["total_bytes"] = sum(r.traffic_bytes for r in records)
+    out["total_steps"] = sum(r.steps for r in records)
+    return out
+
+
+def _nbytes(x) -> int:
+    return int(x.size) * x.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# The collectives.
+# ---------------------------------------------------------------------------
+
+def allgather_states(x, axis: str, *, axis_size: int, gather_axis: int = 0,
+                     tiled: bool = False, tag: str = ""):
+    """AllGather along mesh axis ``axis`` — THE LASP-2 exchange.
+
+    Traffic per device (ring model): ``(g-1) × payload`` — the result is
+    ``g × payload`` of which ``(g-1)/g`` crosses the wire. One collective
+    call = one sequential step regardless of group size: the whole point
+    of LASP-2 vs the ring (paper §3.4).
+    """
+    pb = _nbytes(x)
+    _record(CommRecord("all-gather", pb, (axis_size - 1) * pb, steps=1,
+                       group=axis_size, tag=tag))
+    return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+
+
+def ring_sendrecv(x, axis: str, *, axis_size: int, shift: int = 1,
+                  loop_trips: int = 1, tag: str = ""):
+    """One ring hop: every rank sends ``x`` to ``(rank + shift) % W``.
+
+    Implemented with ``ppermute``; per-device traffic = payload, one
+    sequential step. ``loop_trips``: when called once inside a
+    ``fori_loop`` body that executes W times, pass ``loop_trips=W`` so the
+    tape stays honest (HLO also shows while bodies once — the budget
+    checker has the same caveat).
+    """
+    perm = [(i, (i + shift) % axis_size) for i in range(axis_size)]
+    pb = _nbytes(x)
+    _record(CommRecord("collective-permute", pb, pb * loop_trips,
+                       steps=loop_trips, group=axis_size, tag=tag))
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def reduce_scatter_grads(x, axis: str, *, axis_size: int,
+                         scatter_axis: int = 0, tiled: bool = True,
+                         tag: str = ""):
+    """Reduce-scatter along ``axis`` — the AD transpose of the state
+    AllGather (what ``backward="autodiff"`` puts on the wire; emitted
+    explicitly here for callers that hand-write the mirrored backward).
+
+    Traffic per device: ``(g-1)/g × payload`` (result is payload / g).
+    """
+    pb = _nbytes(x)
+    _record(CommRecord("reduce-scatter", pb,
+                       (axis_size - 1) * pb // axis_size, steps=1,
+                       group=axis_size, tag=tag))
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_axis,
+                                tiled=tiled)
+
+
+# ---------------------------------------------------------------------------
+# Ring / pipelined prefix-scan exchanges (LASP-1 pattern, ZeCO refinement).
+# ---------------------------------------------------------------------------
+
+def auto_slices(dv: int, preferred: int = 4) -> int:
+    """Slice count for the pipelined exchange: largest power of two
+    <= ``preferred`` dividing the state's value dimension."""
+    n = preferred
+    while n > 1 and dv % n:
+        n //= 2
+    return max(n, 1)
+
+
+def _prefix_chain(m_slice, chunk_decay, axis: str, axis_size: int, t,
+                  tag: str):
+    """Unrolled W-1 step ring prefix-accumulation of one state slice.
+
+    At step s, rank t receives the packet that originated at rank
+    ``t-1-s``; every forwarding rank has already folded its own chunk
+    decay in, so the arriving packet equals
+    ``exp(cum[t-1] - cum[src]) * M_src`` — accumulate iff ``src >= 0``.
+    The loop is unrolled (W is a static mesh degree), which (a) lets the
+    HLO budget checker count the 2(W-1) fwd+bwd permutes literally and
+    (b) exposes every hop to XLA's latency-hiding scheduler.
+    """
+    m_prev = jnp.zeros_like(m_slice)
+    packet = m_slice
+    for s in range(axis_size - 1):
+        packet = ring_sendrecv(packet, axis, axis_size=axis_size, tag=tag)
+        m_prev = jnp.where(t - 1 - s >= 0, m_prev + packet, m_prev)
+        packet = packet * chunk_decay
+    return m_prev
+
+
+def pipelined_prefix_exchange(m_loc, log_decay, axis: str, *, axis_size: int,
+                              t, n_slices: Optional[int] = None,
+                              tag: str = "pipelined"):
+    """ZeCO-style pipelined ring prefix-scan of the chunk states.
+
+    ``m_loc``: (..., dk, dv) fp32 local chunk state; ``log_decay``: (...,)
+    fp32 total chunk log-decay; returns the decayed prefix state
+    ``M_{1:t-1}`` (what :func:`prefix_state_combine` computes from a full
+    gather). The prefix combine is elementwise-linear in the state, so the
+    state splits along ``dv`` into ``n_slices`` *independent* ring chains:
+    slice i+1's permute is dataflow-independent of slice i's accumulate,
+    letting the scheduler pipeline communication of one slice behind
+    computation on another (ZeCO's all-scan idea at chunk granularity —
+    same total volume as the plain ring, W-1 → interleaved latency).
+
+    With ``n_slices=1`` this *is* the LASP-1 ring exchange.
+    """
+    dv = m_loc.shape[-1]
+    if n_slices is None:
+        n_slices = auto_slices(dv)
+    chunk_decay = jnp.exp(log_decay)[..., None, None]
+    if n_slices == 1:
+        return _prefix_chain(m_loc, chunk_decay, axis, axis_size, t, tag)
+    slices = jnp.split(m_loc, n_slices, axis=-1)
+    outs = [_prefix_chain(s_, chunk_decay, axis, axis_size, t,
+                          f"{tag}[{i}]") for i, s_ in enumerate(slices)]
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,145 @@
+"""Pluggable inter-chunk state-exchange strategies for LASP-2 layers.
+
+A strategy answers one question: given each rank's local chunk state
+``M_t`` (+ total chunk log-decay ``A_t``), how does rank t obtain the
+decayed prefix state ``M_{1:t-1}``?
+
+=============  ===========================  =======  =====================
+strategy       forward collectives          steps    backward (autodiff)
+=============  ===========================  =======  =====================
+"allgather"    1 all-gather (packed M‖A)    1        1 reduce-scatter
+"ring"         W-1 collective-permutes      W-1      W-1 permutes
+"pipelined"    k(W-1) permutes (1/k size)   W-1*     W-1* (k chains)
+=============  ===========================  =======  =====================
+
+(*) pipelined chains are dataflow-independent, so the W-1 hops of one
+slice hide behind the accumulates of another — same volume as "ring",
+pipelined latency (ZeCO-style; see EXPERIMENTS.md).
+
+"allgather" is the paper's LASP-2 and the only strategy compatible with
+the paper-faithful Algorithm 3/4 ``custom_vjp`` (its backward AllGathers
+the state grads and needs the gathered cumulative decays as residuals);
+"ring" reproduces LASP-1's sequential-dependency pattern *inside* the
+LASP-2 layer for apples-to-apples strategy benchmarking.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import primitives
+from repro.comm.overlap import DoubleBufferedScheduler
+from repro.core.linear_attention import prefix_state_combine
+
+
+class PrefixExchange(NamedTuple):
+    """Result of one inter-chunk prefix exchange.
+
+    ``cum``/``states`` (the gathered (W, ...) cumulative log-decays and
+    chunk states) are only available under the "allgather" strategy —
+    ring-family exchanges never materialize them (that is the point).
+    """
+
+    m_prev: jax.Array              # (..., dk, dv) decayed prefix state
+    intra: object                  # whatever the overlapped compute returned
+    cum: Optional[jax.Array]       # (W, ...) or None
+    states: Optional[jax.Array]    # (W, ..., dk, dv) or None
+
+
+def pack_state(m_loc, a_loc):
+    """Pack (M_t, A_t) into ONE tensor so the exchange is a single
+    collective: (..., dk, dv) ‖ (...,) -> (..., dk*dv + 1) fp32."""
+    lead = m_loc.shape[:-2]
+    return jnp.concatenate(
+        [m_loc.reshape(*lead, -1), a_loc[..., None]], axis=-1)
+
+
+def unpack_state(packed, dk: int, dv: int):
+    """Inverse of :func:`pack_state` (gathered: leading W axis rides
+    along). Returns (ms (..., dk, dv), las (...,))."""
+    ms = packed[..., :-1].reshape(*packed.shape[:-1], dk, dv)
+    return ms, packed[..., -1]
+
+
+class CommStrategy:
+    name: str = "?"
+    supports_faithful = False
+
+    def prefix(self, m_loc, a_loc, axis: str, axis_size: int, t,
+               scheduler: DoubleBufferedScheduler,
+               compute: Callable[[], object]) -> PrefixExchange:
+        raise NotImplementedError
+
+
+class AllGatherStrategy(CommStrategy):
+    """LASP-2 proper: one AllGather of sequence-length-independent state."""
+
+    name = "allgather"
+    supports_faithful = True
+
+    def prefix(self, m_loc, a_loc, axis, axis_size, t, scheduler, compute):
+        dk, dv = m_loc.shape[-2:]
+        packed = pack_state(m_loc, a_loc)
+        gathered, intra = scheduler.run(
+            packed,
+            lambda p: primitives.allgather_states(
+                p, axis, axis_size=axis_size, tag="lasp2.states"),
+            compute)
+        ms, las = unpack_state(gathered, dk, dv)
+        cum = jnp.cumsum(las, axis=0)
+        return PrefixExchange(prefix_state_combine(ms, cum, t), intra,
+                              cum, ms)
+
+
+class RingStrategy(CommStrategy):
+    """LASP-1's pattern: W-1 sequential P2P hops of the full state."""
+
+    name = "ring"
+
+    def prefix(self, m_loc, a_loc, axis, axis_size, t, scheduler, compute):
+        m_prev, intra = scheduler.run(
+            m_loc,
+            lambda m: primitives.pipelined_prefix_exchange(
+                m, a_loc, axis, axis_size=axis_size, t=t, n_slices=1,
+                tag="lasp2.ring"),
+            compute)
+        return PrefixExchange(m_prev, intra, None, None)
+
+
+class PipelinedStrategy(CommStrategy):
+    """ZeCO-style pipelined prefix-scan: the ring, sliced along dv into
+    independent chains so hops of one slice hide behind accumulates of
+    another."""
+
+    name = "pipelined"
+
+    def __init__(self, n_slices: Optional[int] = None):
+        self.n_slices = n_slices
+
+    def prefix(self, m_loc, a_loc, axis, axis_size, t, scheduler, compute):
+        m_prev, intra = scheduler.run(
+            m_loc,
+            lambda m: primitives.pipelined_prefix_exchange(
+                m, a_loc, axis, axis_size=axis_size, t=t,
+                n_slices=self.n_slices, tag="lasp2.pipelined"),
+            compute)
+        return PrefixExchange(m_prev, intra, None, None)
+
+
+_STRATEGIES = {
+    "allgather": AllGatherStrategy,
+    "ring": RingStrategy,
+    "pipelined": PipelinedStrategy,
+}
+
+
+def get_strategy(name: str) -> CommStrategy:
+    try:
+        return _STRATEGIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown comm strategy {name!r}; expected one of "
+            f"{tuple(_STRATEGIES)}") from None

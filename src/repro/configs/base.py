@@ -261,3 +261,6 @@ class RunConfig:
     bf16_params: bool = False        # §Perf: bf16 weight storage (f32 Adam moments)
     microbatch_tokens: int = 4096    # per-device per-microbatch token target
     grad_compression: bool = False   # error-feedback bf16 cross-pod allreduce
+    # SP communication subsystem (repro/comm, docs/communication.md):
+    comm_strategy: str = "allgather"   # allgather | ring | pipelined
+    comm_overlap: str = "overlap"      # overlap | none (A/B benchmarking)

@@ -22,60 +22,45 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map as _shard_map
 
-from repro.core.lasp2 import SPConfig, _pick_block
+from repro.comm import primitives as comm_primitives
+from repro.core.lasp2 import SPConfig
 from repro.core.lasp2h import NEG_INF, _softmax_attend, causal_mask
-from repro.core.linear_attention import chunk_scan, chunk_summaries
+from repro.core.linear_attention import (chunk_scan, chunk_summaries,
+                                         pick_block)
 
 
 def lasp1(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
           block_size: int = 128):
     """LASP-1 (paper Alg. 6, decay-generalized): ring P2P state transfer.
 
-    Each rank waits for M_{t-1} from rank t-1, computes its inter output and
-    updated state, and forwards it — W-1 *sequential* communication steps.
-    We express the ring with ``ppermute`` inside a ``fori_loop``: at step s,
-    rank r holds the running prefix state of chunk r-s-1..; after W-1 steps
-    every rank has consumed all predecessors. (The sequential dependency is
-    the point — it is what LASP-2's AllGather removes.)
+    Each rank waits for M_{t-1} from rank t-1, computes its inter output
+    and updated state, and forwards it — W-1 *sequential* communication
+    steps. The ring is the comm subsystem's unrolled prefix-scan exchange
+    (``repro.comm.primitives.pipelined_prefix_exchange`` with one slice):
+    at step s the packet arriving at rank t originated at rank t-1-s with
+    every intermediate chunk's decay already folded in by the forwarding
+    ranks. The W-1 sequential hops — 2(W-1) per fwd+bwd iteration, each
+    hop transposing to a hop — are the point: they are what LASP-2's
+    single AllGather removes, and the HLO budget tests count them
+    literally (``repro.comm.budget.ring_baseline_budget``).
     """
     if log_a is None:
         log_a = jnp.zeros(q.shape[:-1], dtype=jnp.float32)
     if sp is None or sp.degree == 1:
         return chunk_scan(q, k, v, log_a,
-                          block_size=_pick_block(q.shape[-2], block_size)).o
+                          block_size=pick_block(q.shape[-2], block_size)).o
 
     axis = sp.sp_axis
     w = sp.degree
-    perm = [(i, (i + 1) % w) for i in range(w)]
 
     def local_fn(q_, k_, v_, la_):
-        bs = _pick_block(q_.shape[-2], block_size)
+        bs = pick_block(q_.shape[-2], block_size)
         t = jax.lax.axis_index(axis)
         m_loc, a_loc = chunk_summaries(k_, v_, la_, block_size=bs)
         out = chunk_scan(q_, k_, v_, la_, block_size=bs)  # intra part
         b = jnp.exp(jnp.cumsum(la_.astype(jnp.float32), axis=-1))
-
-        # Ring: circulate (state, accumulated-decay) W-1 times. At step s the
-        # incoming packet left rank (t-1-s); accumulate it iff it belongs to
-        # a predecessor chunk (global causality), with the decay of the
-        # chunks in between already folded in by the senders.
-        def body(s, carry):
-            m_prev, send_m, send_a = carry
-            recv_m = jax.lax.ppermute(send_m, axis, perm)
-            recv_a = jax.lax.ppermute(send_a, axis, perm)
-            src = t - 1 - s                       # chunk id of the payload
-            use = (src >= 0)
-            m_prev = jnp.where(use, m_prev + recv_m, m_prev)
-            # fold my chunk's decay into the payload before forwarding: the
-            # payload decays through every chunk it passes.
-            fwd_m = recv_m * jnp.exp(a_loc)[..., None, None]
-            fwd_a = recv_a + a_loc
-            return (m_prev, fwd_m, fwd_a)
-
-        m0 = jnp.zeros_like(m_loc)
-        # initial packet: my state decayed by nothing yet
-        m_prev, _, _ = jax.lax.fori_loop(
-            0, w - 1, body, (m0, m_loc, a_loc))
+        m_prev = comm_primitives.pipelined_prefix_exchange(
+            m_loc, a_loc, axis, axis_size=w, t=t, n_slices=1, tag="lasp1")
         o_inter = jnp.einsum("...sk,...kv->...sv",
                              q_.astype(jnp.float32) * b[..., None], m_prev)
         return (out.o.astype(jnp.float32) + o_inter).astype(q_.dtype)
@@ -100,7 +85,6 @@ def ring_attention(q, k, v, *, sp: Optional[SPConfig] = None,
     axis = sp.sp_axis
     w = sp.degree
     # send chunk to the next rank; after step s we hold chunk (t - s) mod W
-    perm = [(i, (i + 1) % w) for i in range(w)]
 
     def local_fn(q_, k_, v_):
         b, hq, c, dh = q_.shape
@@ -128,8 +112,12 @@ def ring_attention(q, k, v, *, sp: Optional[SPConfig] = None,
             corr = jnp.exp(m - m_new)
             l = l * corr + jnp.sum(p, axis=-1)
             o = o * corr[..., None] + jnp.einsum("bhst,bhtd->bhsd", p, vf)
-            kc = jax.lax.ppermute(kc, axis, perm)
-            vc = jax.lax.ppermute(vc, axis, perm)
+            # K/V rotate W times inside the fori_loop; the body is traced
+            # once, so the tape is told about all W trips up front.
+            kc = comm_primitives.ring_sendrecv(
+                kc, axis, axis_size=w, loop_trips=w, tag="ring_attn.k")
+            vc = comm_primitives.ring_sendrecv(
+                vc, axis, axis_size=w, loop_trips=w, tag="ring_attn.v")
             return (o, m_new, l, kc, vc)
 
         o0 = jnp.zeros((b, hq, c, dh), jnp.float32)
@@ -160,13 +148,22 @@ def megatron_sp_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         return _softmax_attend(q, k, v, scale=scale, mask=mask)
 
     axis = sp.sp_axis
+    w = sp.degree
 
     def local_fn(q_, k_, v_):
         c = q_.shape[-2]
         t = jax.lax.axis_index(axis)
-        qg = jax.lax.all_gather(q_, axis, axis=2, tiled=True)
-        kg = jax.lax.all_gather(k_, axis, axis=2, tiled=True)
-        vg = jax.lax.all_gather(v_, axis, axis=2, tiled=True)
+        # Three full-activation gathers — traffic O(S·d), the unfavourable
+        # scaling; routed through the subsystem so the tape records it.
+        qg = comm_primitives.allgather_states(
+            q_, axis, axis_size=w, gather_axis=2, tiled=True,
+            tag="megatron.q")
+        kg = comm_primitives.allgather_states(
+            k_, axis, axis_size=w, gather_axis=2, tiled=True,
+            tag="megatron.k")
+        vg = comm_primitives.allgather_states(
+            v_, axis, axis_size=w, gather_axis=2, tiled=True,
+            tag="megatron.v")
         s_tot = qg.shape[2]
         mask = causal_mask(s_tot, s_tot, 0)[None, None] if causal else None
         o = _softmax_attend(qg, kg, vg, scale=scale, mask=mask)

@@ -29,6 +29,13 @@ Sharding integration: we use partial-manual ``jax.shard_map`` —
 ``axis_names={sp_axis}`` makes only the sequence axis manual; batch/head
 dimensions stay auto-sharded by GSPMD (tensor parallelism over ``"model"``,
 batch over ``"pod"`` compose transparently).
+
+Communication goes through the pluggable subsystem in ``repro/comm/``:
+the inter-chunk state exchange is a :class:`repro.comm.strategy`
+("allgather" — the paper; "ring" — LASP-1's pattern; "pipelined" — a
+ZeCO-style sliced ring), scheduled against the intra-chunk kernel by the
+double-buffered overlap scheduler, and pinned to an exact HLO collective
+budget by ``repro.comm.budget`` (see docs/communication.md).
 """
 
 from __future__ import annotations
@@ -43,66 +50,30 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map as _shard_map
 
-from repro.core.linear_attention import chunk_scan, chunk_summaries
+from repro.comm import primitives as comm_primitives
+from repro.comm.overlap import DoubleBufferedScheduler
+from repro.comm.strategy import get_strategy
+from repro.core.linear_attention import (chunk_scan, chunk_summaries,
+                                         pick_block, suffix_grad_combine)
 
 
 @dataclass(frozen=True)
 class SPConfig:
-    """How the sequence dimension is sharded for LASP-2 style layers."""
+    """How the sequence dimension is sharded for LASP-2 style layers.
+
+    ``comm_strategy`` / ``overlap`` are the default exchange strategy and
+    overlap mode for layers run under this config (overridable per call
+    on :func:`lasp2`); see ``repro/comm/strategy.py`` for the matrix.
+    """
 
     mesh: Mesh
     sp_axis: str = "data"    # mesh axis the sequence dim is split over
+    comm_strategy: str = "allgather"   # allgather | ring | pipelined
+    overlap: str = "overlap"           # overlap | none
 
     @property
     def degree(self) -> int:
         return self.mesh.shape[self.sp_axis]
-
-
-def _pick_block(s: int, preferred: int) -> int:
-    """Largest divisor of ``s`` that is <= preferred (MXU-aligned when possible)."""
-    bs = min(preferred, s)
-    while s % bs:
-        bs -= 1
-    return max(bs, 1)
-
-
-# ---------------------------------------------------------------------------
-# Cross-chunk (inter) combination — the math around the AllGather.
-# ---------------------------------------------------------------------------
-
-def _prefix_state(ms, cum, t):
-    """Decayed prefix-combine of gathered chunk states (paper Alg. 2 line 9).
-
-    ms:  (W, ..., dk, dv) gathered chunk states (fp32)
-    cum: (W, ...) inclusive cumulative chunk log-decays along axis 0
-    t:   my chunk index (traced scalar)
-
-    Returns M_{1:t-1} decayed to the *start* of chunk t:
-        sum_{j < t} exp(cum[t-1] - cum[j]) * ms[j]
-    """
-    w_idx = jnp.arange(ms.shape[0])
-    cum_tm1 = jax.lax.dynamic_index_in_dim(
-        cum, jnp.maximum(t - 1, 0), axis=0, keepdims=False)
-    logw = cum_tm1[None] - cum                           # <= 0 for j <= t-1
-    mask = (w_idx < t)
-    shape = (ms.shape[0],) + (1,) * (cum.ndim - 1)
-    w = jnp.where(mask.reshape(shape), jnp.exp(jnp.minimum(logw, 0.0)), 0.0)
-    return jnp.einsum("w...,w...kv->...kv", w, ms)
-
-
-def _suffix_grad_state(dms, cum, t):
-    """Decayed suffix-combine of gathered state grads (paper Alg. 4 line 9).
-
-    dM_t^loc = sum_{t' > t} exp(cum[t'-1] - cum[t]) * dms[t']
-    """
-    w_idx = jnp.arange(dms.shape[0])
-    cum_t = jax.lax.dynamic_index_in_dim(cum, t, axis=0, keepdims=False)
-    cum_prev = jnp.concatenate([jnp.zeros_like(cum[:1]), cum[:-1]], axis=0)
-    logw = cum_prev - cum_t[None]                        # <= 0 for t' > t
-    mask = (w_idx > t)
-    shape = (dms.shape[0],) + (1,) * (cum.ndim - 1)
-    w = jnp.where(mask.reshape(shape), jnp.exp(jnp.minimum(logw, 0.0)), 0.0)
-    return jnp.einsum("w...,w...kv->...kv", w, dms)
 
 
 def _cumulative_decay(log_a):
@@ -114,39 +85,45 @@ def _cumulative_decay(log_a):
 # Local (per-shard) forward bodies.
 # ---------------------------------------------------------------------------
 
-def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size):
+def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
+                      strategy="allgather", overlap="overlap"):
     """Runs on each device's sequence shard. Returns output + residual pack.
 
-    Ordering mirrors paper Alg. 2: chunk summaries are produced first so the
-    AllGather can overlap with the (heavy) intra-chunk computation — XLA's
-    latency-hiding scheduler overlaps the independent ``all_gather`` with
-    ``chunk_scan`` on TPU, which is the paper's comm/compute overlap.
+    Ordering mirrors paper Alg. 2: the cheap chunk-summary pass produces
+    the exchange payload first; the strategy's collective is then issued
+    *around* the heavy intra-chunk ``chunk_scan`` by the double-buffered
+    scheduler — with ``overlap="overlap"`` the two are dataflow
+    independent and the gather's wire time hides behind the intra-chunk
+    kernel (the paper's comm/compute overlap), with ``"none"`` the
+    exchange is barriered behind compute for A/B benchmarking.
     """
-    bs = _pick_block(q.shape[-2], block_size)
+    bs = pick_block(q.shape[-2], block_size)
     # (1) cheap summary pass: M_t, A_t — only K/V/decay.
     m_loc, a_loc = chunk_summaries(k, v, log_a, block_size=bs)
-    # (2) single AllGather of (M_t, A_t) — THE communication of LASP-2.
-    ms = jax.lax.all_gather(m_loc, sp_axis)              # (W, ..., dk, dv)
-    las = jax.lax.all_gather(a_loc, sp_axis)             # (W, ...)
-    # (3) intra-chunk output (independent of the gather → overlappable).
-    out = chunk_scan(q, k, v, log_a, block_size=bs)
-    # (4) local prefix combine + inter-chunk output.
+    # (2) + (3): the strategy's exchange, overlapped with the intra-chunk
+    # kernel by the scheduler. For "allgather" this is THE single
+    # collective of LASP-2.
     t = jax.lax.axis_index(sp_axis)
-    cum = jnp.cumsum(las, axis=0)
-    m_prev = _prefix_state(ms, cum, t)
+    ex = get_strategy(strategy).prefix(
+        m_loc, a_loc, sp_axis, axis_size, t,
+        DoubleBufferedScheduler(overlap),
+        lambda: chunk_scan(q, k, v, log_a, block_size=bs))
+    # (4) local prefix combine + inter-chunk output.
     b = _cumulative_decay(log_a)
     o_inter = jnp.einsum(
-        "...sk,...kv->...sv", q.astype(jnp.float32) * b[..., None], m_prev)
-    o = out.o.astype(jnp.float32) + o_inter
-    return o.astype(q.dtype), (m_prev, cum, t)
+        "...sk,...kv->...sv", q.astype(jnp.float32) * b[..., None],
+        ex.m_prev)
+    o = ex.intra.o.astype(jnp.float32) + o_inter
+    return o.astype(q.dtype), (ex.m_prev, ex.cum, t)
 
 
-def _noncausal_fwd_local(q, k, v, sp_axis, block_size):
+def _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size):
     """Paper Alg. 1: no mask — every position reads the full-sequence state."""
     del block_size
     kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
     m_loc = jnp.einsum("...sk,...sv->...kv", kf, vf)
-    ms = jax.lax.all_gather(m_loc, sp_axis)
+    ms = comm_primitives.allgather_states(
+        m_loc, sp_axis, axis_size=axis_size, tag="lasp2.noncausal")
     m_tot = jnp.sum(ms, axis=0)
     o = jnp.einsum("...sk,...kv->...sv", q.astype(jnp.float32), m_tot)
     return o.astype(q.dtype), m_tot
@@ -156,29 +133,33 @@ def _noncausal_fwd_local(q, k, v, sp_axis, block_size):
 # Paper-faithful custom_vjp (Algorithms 3/4).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
-def _lasp2_causal_faithful(q, k, v, log_a, sp_axis, block_size):
-    o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _lasp2_causal_faithful(q, k, v, log_a, sp_axis, block_size, axis_size,
+                           overlap):
+    o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
+                             "allgather", overlap)
     return o
 
 
-def _faithful_fwd(q, k, v, log_a, sp_axis, block_size):
-    o, (m_prev, cum, t) = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size)
+def _faithful_fwd(q, k, v, log_a, sp_axis, block_size, axis_size, overlap):
+    o, (m_prev, cum, t) = _causal_fwd_local(
+        q, k, v, log_a, sp_axis, block_size, axis_size, "allgather", overlap)
     return o, (q, k, v, log_a, m_prev, cum, t)
 
 
-def _faithful_bwd(sp_axis, block_size, res, do):
+def _faithful_bwd(sp_axis, block_size, axis_size, overlap, res, do):
     q, k, v, log_a, m_prev, cum, t = res
-    bs = _pick_block(q.shape[-2], block_size)
+    bs = pick_block(q.shape[-2], block_size)
     dof = do.astype(jnp.float32)
     b = _cumulative_decay(log_a)
     qb = q.astype(jnp.float32) * b[..., None]
     # Alg. 4 line 3: dM_t = (Q_t~)^T dO_t  (decay-weighted in our general form)
     dm_up = jnp.einsum("...sk,...sv->...kv", qb, dof)
     # Alg. 4 line 4: the single backward AllGather.
-    dms = jax.lax.all_gather(dm_up, sp_axis)
+    dms = comm_primitives.allgather_states(
+        dm_up, sp_axis, axis_size=axis_size, tag="lasp2.dstates")
     # Alg. 4 line 9: decayed suffix sum, local.
-    dm_loc = _suffix_grad_state(dms, cum, t)
+    dm_loc = suffix_grad_combine(dms, cum, t)
 
     # Intra-chunk + local state-contribution gradients (Alg. 4 lines 5–7,
     # 10–11). Computed by re-running the local chunk pass under VJP — the
@@ -199,23 +180,24 @@ def _faithful_bwd(sp_axis, block_size, res, do):
 _lasp2_causal_faithful.defvjp(_faithful_fwd, _faithful_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _lasp2_noncausal_faithful(q, k, v, sp_axis, block_size):
-    o, _ = _noncausal_fwd_local(q, k, v, sp_axis, block_size)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _lasp2_noncausal_faithful(q, k, v, sp_axis, block_size, axis_size):
+    o, _ = _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size)
     return o
 
 
-def _nc_fwd(q, k, v, sp_axis, block_size):
-    o, m_tot = _noncausal_fwd_local(q, k, v, sp_axis, block_size)
+def _nc_fwd(q, k, v, sp_axis, block_size, axis_size):
+    o, m_tot = _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size)
     return o, (q, k, v, m_tot)
 
 
-def _nc_bwd(sp_axis, block_size, res, do):
+def _nc_bwd(sp_axis, block_size, axis_size, res, do):
     q, k, v, m_tot = res
     dof = do.astype(jnp.float32)
     # Alg. 3: dM_t = Q_t^T dO_t; AllGather; combine.
     dm_up = jnp.einsum("...sk,...sv->...kv", q.astype(jnp.float32), dof)
-    dms = jax.lax.all_gather(dm_up, sp_axis)
+    dms = comm_primitives.allgather_states(
+        dm_up, sp_axis, axis_size=axis_size, tag="lasp2.nc.dstates")
     # NOTE: paper Alg. 3 line 5 writes Sum([dM]_{t+1}^T) — a suffix sum — but
     # in the unmasked form every chunk's state feeds every output, so the
     # correct cotangent sums over *all* chunks (verified against autodiff in
@@ -236,8 +218,10 @@ _lasp2_noncausal_faithful.defvjp(_nc_fwd, _nc_bwd)
 # Autodiff-path forwards (plain functions; XLA derives the backward).
 # ---------------------------------------------------------------------------
 
-def _lasp2_causal_autodiff(q, k, v, log_a, sp_axis, block_size):
-    o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size)
+def _lasp2_causal_autodiff(q, k, v, log_a, sp_axis, block_size, axis_size,
+                           strategy, overlap):
+    o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
+                             strategy, overlap)
     return o
 
 
@@ -245,34 +229,34 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
                      block_size: int = 128):
     """Causal LASP-2 forward that also returns the end-of-sequence memory
     state (used by prefill to seed the decode cache). No custom_vjp —
-    prefill is inference-only."""
+    prefill is inference-only. Always the "allgather" strategy: the end
+    state needs every chunk's contribution, which the gather provides
+    for free."""
     if log_a is None:
         log_a = jnp.zeros(q.shape[:-1], dtype=jnp.float32)
     if sp is None or sp.degree == 1:
         out = chunk_scan(q, k, v, log_a,
-                         block_size=_pick_block(q.shape[-2], block_size))
+                         block_size=pick_block(q.shape[-2], block_size))
         return out.o, out.state
 
     axis = sp.sp_axis
+    w = sp.degree
 
     def local_fn(q_, k_, v_, la_):
-        bs = _pick_block(q_.shape[-2], block_size)
+        bs = pick_block(q_.shape[-2], block_size)
         m_loc, a_loc = chunk_summaries(k_, v_, la_, block_size=bs)
-        ms = jax.lax.all_gather(m_loc, axis)
-        las = jax.lax.all_gather(a_loc, axis)
-        out = chunk_scan(q_, k_, v_, la_, block_size=bs)
         t = jax.lax.axis_index(axis)
-        cum = jnp.cumsum(las, axis=0)
-        m_prev = _prefix_state(ms, cum, t)
+        ex = get_strategy("allgather").prefix(
+            m_loc, a_loc, axis, w, t, DoubleBufferedScheduler(sp.overlap),
+            lambda: chunk_scan(q_, k_, v_, la_, block_size=bs))
         b = _cumulative_decay(la_)
-        o = out.o.astype(jnp.float32) + jnp.einsum(
+        o = ex.intra.o.astype(jnp.float32) + jnp.einsum(
             "...sk,...kv->...sv", q_.astype(jnp.float32) * b[..., None],
-            m_prev)
+            ex.m_prev)
         # global end state: decayed combine of all chunks (same on all ranks)
-        w_ = ms.shape[0]
-        logw = cum[-1][None] - cum
+        logw = ex.cum[-1][None] - ex.cum
         m_end = jnp.einsum("w...,w...kv->...kv",
-                           jnp.exp(jnp.minimum(logw, 0.0)), ms)
+                           jnp.exp(jnp.minimum(logw, 0.0)), ex.states)
         return o.astype(q_.dtype), m_end
 
     nd = q.ndim
@@ -292,7 +276,9 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
 
 def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
           causal: bool = True, block_size: int = 128,
-          backward: str = "faithful"):
+          backward: str = "faithful",
+          comm_strategy: Optional[str] = None,
+          overlap: Optional[str] = None):
     """Chunked linear attention with LASP-2 sequence parallelism.
 
     Args:
@@ -304,30 +290,56 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
       causal: causal (paper Alg. 2) vs bidirectional (paper Alg. 1).
       backward: "faithful" (paper Alg. 3/4 custom_vjp) or "autodiff".
         Learned/data-dependent ``log_a`` requires "autodiff".
+      comm_strategy: inter-chunk state exchange — "allgather" (paper),
+        "ring" (LASP-1 pattern), "pipelined" (ZeCO-style sliced ring).
+        ``None`` → ``sp.comm_strategy``. The faithful backward is the
+        paper's AllGather algorithm, so non-"allgather" strategies
+        always differentiate via autodiff (their permutes transpose to
+        permutes).
+      overlap: "overlap" (double-buffered, default) or "none" (exchange
+        barriered behind intra-chunk compute — the A/B baseline).
+        ``None`` → ``sp.overlap``.
     """
     if log_a is None:
         log_a = jnp.zeros(q.shape[:-1], dtype=jnp.float32)
     if sp is None or sp.degree == 1:
         if causal:
             return chunk_scan(q, k, v, log_a,
-                              block_size=_pick_block(q.shape[-2], block_size)).o
+                              block_size=pick_block(q.shape[-2], block_size)).o
         m_tot, _ = chunk_summaries(
-            k, v, None, block_size=_pick_block(q.shape[-2], block_size))
+            k, v, None, block_size=pick_block(q.shape[-2], block_size))
         # no-decay bidirectional total state
         return jnp.einsum("...sk,...kv->...sv", q.astype(jnp.float32),
                           m_tot).astype(q.dtype)
 
     axis = sp.sp_axis
+    w = sp.degree
+    strategy = comm_strategy if comm_strategy is not None \
+        else sp.comm_strategy
+    ovl = overlap if overlap is not None else sp.overlap
+    get_strategy(strategy)   # validate the name on every path
+    if strategy != "allgather" and backward == "faithful":
+        backward = "autodiff"   # faithful == the paper's AllGather pattern
+    if not causal and strategy != "allgather":
+        # The bidirectional form (Alg. 1/3) consumes the TOTAL state, not a
+        # rank-dependent prefix — a ring prefix-scan does not apply. Fail
+        # loudly rather than silently benchmarking the wrong thing.
+        raise ValueError(
+            f"comm_strategy={strategy!r} is causal-only; the bidirectional "
+            "path always uses the allgather exchange")
     nd = q.ndim
     spec_qkv = P(*([None] * (nd - 2)), axis, None)
     spec_a = P(*([None] * (nd - 2)), axis)
 
     if causal:
-        fn = (_lasp2_causal_faithful if backward == "faithful"
-              else _lasp2_causal_autodiff)
-
-        def mapped(q_, k_, v_, la_):
-            return fn(q_, k_, v_, la_, axis, block_size)
+        if backward == "faithful":
+            def mapped(q_, k_, v_, la_):
+                return _lasp2_causal_faithful(q_, k_, v_, la_, axis,
+                                              block_size, w, ovl)
+        else:
+            def mapped(q_, k_, v_, la_):
+                return _lasp2_causal_autodiff(q_, k_, v_, la_, axis,
+                                              block_size, w, strategy, ovl)
 
         return _shard_map(
             mapped, mesh=sp.mesh,
@@ -337,10 +349,10 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
 
     if backward == "faithful":
         def mapped_nc(q_, k_, v_):
-            return _lasp2_noncausal_faithful(q_, k_, v_, axis, block_size)
+            return _lasp2_noncausal_faithful(q_, k_, v_, axis, block_size, w)
     else:
         def mapped_nc(q_, k_, v_):
-            o, _ = _noncausal_fwd_local(q_, k_, v_, axis, block_size)
+            o, _ = _noncausal_fwd_local(q_, k_, v_, axis, block_size, w)
             return o
 
     return _shard_map(

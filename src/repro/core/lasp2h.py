@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map as _shard_map
 
+from repro.comm import primitives as comm_primitives
 from repro.core.lasp2 import SPConfig
 
 NEG_INF = -1e30
@@ -98,8 +99,12 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         t = jax.lax.axis_index(axis)
         # Alg. 7 line 5: gather K/V chunks; tiled=True concatenates along a
         # new leading dim which we fold into the sequence dim (line 6).
-        kg = jax.lax.all_gather(k_, axis, axis=2, tiled=True)  # (B,Hkv,S,dh)
-        vg = jax.lax.all_gather(v_, axis, axis=2, tiled=True)
+        kg = comm_primitives.allgather_states(
+            k_, axis, axis_size=w, gather_axis=2, tiled=True,
+            tag="lasp2h.k")                                    # (B,Hkv,S,dh)
+        vg = comm_primitives.allgather_states(
+            v_, axis, axis_size=w, gather_axis=2, tiled=True,
+            tag="lasp2h.v")
         mask = None
         if causal:
             mask = causal_mask(c, w * c, t * c,
@@ -252,7 +257,6 @@ def windowed_context_attention(q, k, v, window: int, *,
 
     axis = sp.sp_axis
     w_ranks = sp.degree
-    perm = [(i, (i + 1) % w_ranks) for i in range(w_ranks)]
 
     def local_fn(q_, k_, v_):
         c = q_.shape[2]
@@ -260,11 +264,16 @@ def windowed_context_attention(q, k, v, window: int, *,
         # rank 0's halo refers to positions < 0 under the band mask
         # (min_kpos), so whatever arrives there never attends.
         if halo_mode == "ppermute":
-            halo_k = jax.lax.ppermute(k_[:, :, -window:], axis, perm)
-            halo_v = jax.lax.ppermute(v_[:, :, -window:], axis, perm)
+            halo_k = comm_primitives.ring_sendrecv(
+                k_[:, :, -window:], axis, axis_size=w_ranks, tag="halo.k")
+            halo_v = comm_primitives.ring_sendrecv(
+                v_[:, :, -window:], axis, axis_size=w_ranks, tag="halo.v")
         else:
-            hk = jax.lax.all_gather(k_[:, :, -window:], axis)  # (W,...)
-            hv = jax.lax.all_gather(v_[:, :, -window:], axis)
+            hk = comm_primitives.allgather_states(
+                k_[:, :, -window:], axis, axis_size=w_ranks,
+                tag="halo.k")                                  # (W,...)
+            hv = comm_primitives.allgather_states(
+                v_[:, :, -window:], axis, axis_size=w_ranks, tag="halo.v")
             prev = jnp.maximum(t - 1, 0)
             halo_k = jax.lax.dynamic_index_in_dim(hk, prev, 0,
                                                   keepdims=False)
@@ -344,9 +353,12 @@ def sharded_decode_attention(q, k_cache, v_cache, cache_len, *,
         valid = jnp.broadcast_to(valid, (q_.shape[0], c))
         o, m, l = partial_attend(q_, k_, v_, valid)
         # Merge partials: gather (o, m, l) across shards — O(B*Hq*dh)·W bytes.
-        og = jax.lax.all_gather(o, axis)   # (W, B, Hq, dh)
-        mg = jax.lax.all_gather(m, axis)   # (W, B, Hq)
-        lg = jax.lax.all_gather(l, axis)
+        og = comm_primitives.allgather_states(
+            o, axis, axis_size=w, tag="decode.o")   # (W, B, Hq, dh)
+        mg = comm_primitives.allgather_states(
+            m, axis, axis_size=w, tag="decode.m")   # (W, B, Hq)
+        lg = comm_primitives.allgather_states(
+            l, axis, axis_size=w, tag="decode.l")
         m_glob = jnp.max(mg, axis=0)
         corr = jnp.exp(mg - m_glob[None])
         l_glob = jnp.sum(lg * corr, axis=0)
@@ -416,12 +428,16 @@ def ring_decode_attention(q, k_cache, v_cache, key_pos, q_pos, *,
         return o[:, :, None, :].astype(q.dtype)
 
     axis = sp.sp_axis
+    w = sp.degree
 
     def local_fn(q_, k_, v_, kp_, qp_):
         o, m, l = partial_attend(q_, k_, v_, slot_valid(kp_, qp_))
-        og = jax.lax.all_gather(o, axis)
-        mg = jax.lax.all_gather(m, axis)
-        lg = jax.lax.all_gather(l, axis)
+        og = comm_primitives.allgather_states(
+            o, axis, axis_size=w, tag="ring_decode.o")
+        mg = comm_primitives.allgather_states(
+            m, axis, axis_size=w, tag="ring_decode.m")
+        lg = comm_primitives.allgather_states(
+            l, axis, axis_size=w, tag="ring_decode.l")
         m_glob = jnp.max(mg, axis=0)
         corr = jnp.exp(mg - m_glob[None])
         l_glob = jnp.sum(lg * corr, axis=0)

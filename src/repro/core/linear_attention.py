@@ -39,6 +39,32 @@ import jax.numpy as jnp
 # information through catastrophic cancellation in the cumsum.
 RESET_LOG_A = -60.0
 
+# Block sizes the MXU tiles without padding waste, largest first.
+MXU_ALIGNED_BLOCKS = (256, 128, 64, 32)
+
+
+def pick_block(s: int, preferred: int) -> int:
+    """Chunk block size for a local sequence of length ``s``.
+
+    Returns ``preferred`` (capped at ``s``) when it divides ``s``;
+    otherwise the largest MXU-aligned divisor (128/64/32 — e.g. S=192,
+    preferred=128 → 64: three full tiles instead of two ragged 96-blocks);
+    only when no aligned divisor exists, the largest divisor <= preferred.
+    Shared by ``core/lasp2.py`` and ``kernels/ops.py`` — keep the policy in
+    one place so the XLA scan and the Pallas kernel block identically.
+    """
+    bs = min(preferred, s)
+    if bs < 1:
+        return 1
+    if s % bs == 0:
+        return bs
+    for cand in MXU_ALIGNED_BLOCKS:
+        if cand <= bs and s % cand == 0:
+            return cand
+    while s % bs:
+        bs -= 1
+    return max(bs, 1)
+
 
 class ChunkOutputs(NamedTuple):
     """Outputs of a chunked linear-attention pass over a local sequence."""
@@ -235,6 +261,45 @@ def chunk_summaries(k, v, log_a=None, *, block_size=128):
           jnp.zeros(tuple(lead), jnp.float32))
     (m, ld), _ = jax.lax.scan(body, s0, xs)
     return m, ld
+
+
+# ---------------------------------------------------------------------------
+# Gathered-state combines (the local math around an SP exchange).
+# ---------------------------------------------------------------------------
+
+def prefix_state_combine(ms, cum, t):
+    """Decayed prefix-combine of gathered chunk states (paper Alg. 2 line 9).
+
+    ms:  (W, ..., dk, dv) gathered chunk states (fp32)
+    cum: (W, ...) inclusive cumulative chunk log-decays along axis 0
+    t:   my chunk index (traced scalar)
+
+    Returns M_{1:t-1} decayed to the *start* of chunk t:
+        sum_{j < t} exp(cum[t-1] - cum[j]) * ms[j]
+    """
+    w_idx = jnp.arange(ms.shape[0])
+    cum_tm1 = jax.lax.dynamic_index_in_dim(
+        cum, jnp.maximum(t - 1, 0), axis=0, keepdims=False)
+    logw = cum_tm1[None] - cum                           # <= 0 for j <= t-1
+    mask = (w_idx < t)
+    shape = (ms.shape[0],) + (1,) * (cum.ndim - 1)
+    w = jnp.where(mask.reshape(shape), jnp.exp(jnp.minimum(logw, 0.0)), 0.0)
+    return jnp.einsum("w...,w...kv->...kv", w, ms)
+
+
+def suffix_grad_combine(dms, cum, t):
+    """Decayed suffix-combine of gathered state grads (paper Alg. 4 line 9).
+
+    dM_t^loc = sum_{t' > t} exp(cum[t'-1] - cum[t]) * dms[t']
+    """
+    w_idx = jnp.arange(dms.shape[0])
+    cum_t = jax.lax.dynamic_index_in_dim(cum, t, axis=0, keepdims=False)
+    cum_prev = jnp.concatenate([jnp.zeros_like(cum[:1]), cum[:-1]], axis=0)
+    logw = cum_prev - cum_t[None]                        # <= 0 for t' > t
+    mask = (w_idx > t)
+    shape = (dms.shape[0],) + (1,) * (cum.ndim - 1)
+    w = jnp.where(mask.reshape(shape), jnp.exp(jnp.minimum(logw, 0.0)), 0.0)
+    return jnp.einsum("w...,w...kv->...kv", w, dms)
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear_attention import chunk_scan, recurrent_step
+from repro.core.linear_attention import (chunk_scan, pick_block,
+                                         recurrent_step)
 from repro.core.lasp2h import _softmax_attend, causal_mask
 from repro.kernels import flash_attention as _flash
 from repro.kernels import lasp2_chunk as _chunk
@@ -38,12 +39,17 @@ def linear_attention_op(q, k, v, log_a=None, *, block_size: int = 128,
     dv = v.shape[-1]
     if log_a is None:
         log_a = jnp.zeros((b, h, s), jnp.float32)
-    # Serving prefill sees arbitrary prompt lengths. Rather than shrinking
-    # the block to a divisor of S (degenerates to 1-token blocks for prime
-    # lengths), right-pad to the next block multiple: zero k/v rows add
-    # nothing to the state and log_a = 0 leaves the decay product alone,
-    # so outputs (sliced back to S), final state, and log decay are exact.
-    bs = min(block_size, s)
+    # Block policy is shared with core/lasp2.py (``pick_block``): the
+    # preferred block when it divides S, else the largest MXU-aligned
+    # divisor. Serving prefill additionally sees arbitrary prompt lengths
+    # where no usable divisor exists (e.g. prime S) — rather than
+    # degenerating toward 1-token blocks, right-pad to the next block
+    # multiple: zero k/v rows add nothing to the state and log_a = 0
+    # leaves the decay product alone, so outputs (sliced back to S),
+    # final state, and log decay are exact.
+    bs = pick_block(s, block_size)
+    if bs != s and bs % 32:
+        bs = min(block_size, s)
     if s % bs:
         pad = bs - s % bs
         zkv = ((0, 0),) * (q.ndim - 2) + ((0, pad), (0, 0))

@@ -112,6 +112,16 @@ def parse_collectives(hlo_text: str, total_devices: int) -> List[Collective]:
     return out
 
 
+def collective_counts(hlo_text: str, total_devices: int) -> Dict[str, int]:
+    """Instruction counts per collective op in the compiled module (same
+    while-body caveat as :func:`parse_collectives`). The comm-budget
+    checks (``repro.comm.budget``) are built on this."""
+    counts: Dict[str, int] = {}
+    for c in parse_collectives(hlo_text, total_devices):
+        counts[c.op] = counts.get(c.op, 0) + c.count
+    return counts
+
+
 def collective_summary(colls: List[Collective]) -> Dict[str, float]:
     summary: Dict[str, float] = {}
     for c in colls:

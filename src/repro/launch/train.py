@@ -37,6 +37,12 @@ def main():
     ap.add_argument("--multi-device", action="store_true",
                     help="use all local devices as a (data,) mesh")
     ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--comm-strategy", default="allgather",
+                    choices=["allgather", "ring", "pipelined"],
+                    help="SP state-exchange strategy (repro/comm)")
+    ap.add_argument("--comm-overlap", default="overlap",
+                    choices=["overlap", "none"],
+                    help="comm/compute overlap mode (A/B benchmarking)")
     args = ap.parse_args()
 
     import dataclasses
@@ -60,7 +66,9 @@ def main():
                     learning_rate=args.lr, total_steps=args.steps,
                     warmup_steps=max(args.steps // 20, 5),
                     remat=args.remat, seed=args.seed,
-                    grad_compression=args.grad_compression)
+                    grad_compression=args.grad_compression,
+                    comm_strategy=args.comm_strategy,
+                    comm_overlap=args.comm_overlap)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
                        seed=args.seed)
     plan = None
@@ -69,7 +77,9 @@ def main():
         mesh = jax.make_mesh((len(jax.devices()),), ("data",),
                              **auto_axis_types(1))
         plan = make_plan(mesh, "train", global_batch=args.batch,
-                         n_kv_heads=cfg.n_kv_heads)
+                         n_kv_heads=cfg.n_kv_heads,
+                         comm_strategy=run.comm_strategy,
+                         comm_overlap=run.comm_overlap)
     state, history = train(cfg, run, data, plan=plan,
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)

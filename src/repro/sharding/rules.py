@@ -180,8 +180,15 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
               global_batch: int = 1, n_kv_heads: int = 8,
               n_heads: Optional[int] = None,
               params_bytes: Optional[int] = None,
-              backend: Optional[str] = None) -> Parallelism:
+              backend: Optional[str] = None,
+              comm_strategy: str = "allgather",
+              comm_overlap: str = "overlap") -> Parallelism:
     """Resolve the activation rules for a cell.
+
+    ``comm_strategy`` / ``comm_overlap`` select the SP state-exchange
+    strategy and the comm/compute overlap mode for every LASP-2 layer run
+    under the plan (``repro/comm``; threaded from
+    ``RunConfig.comm_strategy`` by the launchers).
 
     train   — batch over ("pod","data") [plain DP+FSDP], no SP.
     prefill — sequence over "data" (LASP-2/2H SP), batch over "pod".
@@ -220,7 +227,9 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
                       "ff": None, "vocab": None, "experts": None,
                       "cache_seq": "data"}
         if data_size > 1:
-            plan.sp = SPConfig(mesh=mesh, sp_axis="data")
+            plan.sp = SPConfig(mesh=mesh, sp_axis="data",
+                               comm_strategy=comm_strategy,
+                               overlap=comm_overlap)
         return plan
 
     if shape_kind == "train":
@@ -235,14 +244,18 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
         if global_batch % _axis_size(mesh, dp) != 0:
             plan.rules.update({"batch": "pod" if has_pod else None,
                                "seq": "data"})
-            plan.sp = SPConfig(mesh=mesh, sp_axis="data")
+            plan.sp = SPConfig(mesh=mesh, sp_axis="data",
+                               comm_strategy=comm_strategy,
+                               overlap=comm_overlap)
     elif shape_kind == "prefill":
         plan.rules = {"batch": "pod" if has_pod else None, "seq": "data",
                       "residual_seq": "data",
                       "heads": tp, "kv_heads": tp, "ff": tp, "vocab": tp,
                       "experts": tp, "cache_seq": "data"}
         if data_size > 1:
-            plan.sp = SPConfig(mesh=mesh, sp_axis="data")
+            plan.sp = SPConfig(mesh=mesh, sp_axis="data",
+                               comm_strategy=comm_strategy,
+                               overlap=comm_overlap)
     elif shape_kind == "decode":
         cache_axis = tp if (tp and n_kv_heads % tp_size != 0) else None
         plan.rules = {"batch": dp, "seq": None, "heads": tp,
