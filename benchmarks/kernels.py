@@ -1,0 +1,89 @@
+"""Kernel-backend A/B: pallas(interpret) vs XLA intra-chunk wall time.
+
+Measured: median/p90 per call of ``ops.linear_attention_op`` — the
+LASP-2 intra-chunk hot path — on each differentiable backend, forward
+and forward+backward (``jax.grad`` pulling on o, state and log_decay,
+i.e. what the faithful SP backward pulls on). On this CPU container the
+interpret numbers are *indicative only* (Pallas interpret mode is a
+jax-level emulator; the TPU "pallas" backend is the target) — the bench
+exists so CI tracks that the custom_vjp path stays wired and its
+relative cost trajectory across PRs. Derived: fwd/bwd FLOP counts of
+the chunked algorithm. Emits ``BENCH_kernels.json``.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_subprocess_bench, write_bench_json
+
+BENCH_NAME = "kernels"
+
+_CODE = r"""
+import json, time
+import jax, jax.numpy as jnp
+from repro.kernels import ops
+from benchmarks.common import percentile
+
+BH, S, D, BS = 4, 2048, 64, 128
+key = jax.random.PRNGKey(0)
+ks = jax.random.split(key, 4)
+q = jax.random.normal(ks[0], (1, BH, S, D)) * 0.3
+k = jax.random.normal(ks[1], (1, BH, S, D)) * 0.3
+v = jax.random.normal(ks[2], (1, BH, S, D)) * 0.5
+la = -jnp.abs(jax.random.normal(ks[3], (1, BH, S))) * 0.03
+
+def make_fwd(backend):
+    return jax.jit(lambda a, b, c, d: ops.linear_attention_op(
+        a, b, c, d, block_size=BS, backend=backend)[0])
+
+def make_grad(backend):
+    def loss(a, b, c, d):
+        o, st, ld = ops.linear_attention_op(a, b, c, d, block_size=BS,
+                                            backend=backend)
+        return jnp.sum(o) + jnp.sum(st) + jnp.sum(ld)
+    return jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
+
+# chunked-algorithm FLOPs (per _block_terms: QK^T, scores·V, K^T V + the
+# inter-chunk (q·b)@M term), fwd; bwd re-runs ~2x that in the two passes.
+flops_fwd = 2 * S * (2 * BS * D + 2 * D * D) * BH
+res = {}
+for backend in ("xla", "interpret"):
+    for tag, fn in (("fwd", make_fwd(backend)), ("grad", make_grad(backend))):
+        out = fn(q, k, v, la)
+        jax.block_until_ready(out)
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, k, v, la))
+            times.append((time.perf_counter() - t0) * 1e6)
+        res[f"{backend}_{tag}"] = {
+            "median_us": percentile(times, 50),
+            "p90_us": percentile(times, 90),
+            "flops_analytic": flops_fwd * (3 if tag == "grad" else 1),
+        }
+print(json.dumps(res))
+"""
+
+
+def main():
+    res = run_subprocess_bench(_CODE, devices=1)
+    rows = []
+    for name, r in sorted(res.items()):
+        rows.append((f"kernels/{name}", r["median_us"],
+                     f"p90={r['p90_us']:.0f}us "
+                     f"flops={r['flops_analytic']}"))
+    emit(rows, header=None)
+    xla = res["xla_grad"]["median_us"]
+    interp = res["interpret_grad"]["median_us"]
+    return {
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+        "shape": {"bh": 4, "s": 2048, "d": 64, "block": 128},
+        "interpret_over_xla_grad": interp / max(xla, 1e-9),
+        "note": ("interpret backend is a CPU emulator of the Pallas "
+                 "kernel — TPU 'pallas' is the production path; tracked "
+                 "for wiring + trajectory, not absolute speed"),
+    }
+
+
+if __name__ == "__main__":
+    main()

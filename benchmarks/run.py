@@ -20,7 +20,7 @@ import traceback
 
 from benchmarks.common import write_bench_json
 
-BENCHES = ["fig3_speed", "comm_strategies", "table2_convergence",
+BENCHES = ["fig3_speed", "comm_strategies", "kernels", "table2_convergence",
            "table3_bidirectional", "table4_hybrid_ratio",
            "table5_gather_splits", "table6_scalability"]
 

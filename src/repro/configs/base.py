@@ -264,3 +264,7 @@ class RunConfig:
     # SP communication subsystem (repro/comm, docs/communication.md):
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     comm_overlap: str = "overlap"      # overlap | none (A/B benchmarking)
+    # Kernel dispatch (repro/kernels/ops.py): intra-chunk/attention compute
+    # path — "xla" | "pallas" | "interpret"; None = platform default
+    # (pallas on TPU, xla elsewhere).
+    kernel_backend: Optional[str] = None

@@ -37,6 +37,25 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
                check_rep=check_vma)
 
 
+def is_tracer(x) -> bool:
+    """True iff ``x`` is a jax tracer (an abstract value inside a trace).
+
+    ``jax.core.Tracer`` is deprecated-path API on newer jax (the class
+    moved to ``jax.extend.core``); resolve whichever location exists so
+    backend-dispatch checks (e.g. "is this sliding window dynamic?") keep
+    working across versions without deprecation warnings.
+    """
+    tracer_cls = None
+    try:
+        from jax.extend import core as _jex_core
+        tracer_cls = getattr(_jex_core, "Tracer", None)
+    except ImportError:
+        pass
+    if tracer_cls is None:
+        tracer_cls = jax.core.Tracer
+    return isinstance(x, tracer_cls)
+
+
 def tpu_compiler_params(**kw):
     """``pltpu.CompilerParams`` across the 0.4→0.5 rename
     (older jax exposes it as ``TPUCompilerParams``)."""

@@ -36,6 +36,12 @@ the inter-chunk state exchange is a :class:`repro.comm.strategy`
 ZeCO-style sliced ring), scheduled against the intra-chunk kernel by the
 double-buffered overlap scheduler, and pinned to an exact HLO collective
 budget by ``repro.comm.budget`` (see docs/communication.md).
+
+Intra-chunk compute dispatches through ``repro.kernels.ops`` under the
+``kernel_backend`` knob (``xla`` — the ``chunk_scan`` block scan;
+``pallas`` — the fused TPU kernel, differentiable via its two-pass
+backward; ``interpret`` — the Pallas kernel in interpret mode, used by
+the CPU test batteries). ``None`` resolves to the platform default.
 """
 
 from __future__ import annotations
@@ -53,8 +59,9 @@ from repro.core.compat import shard_map as _shard_map
 from repro.comm import primitives as comm_primitives
 from repro.comm.overlap import DoubleBufferedScheduler
 from repro.comm.strategy import get_strategy
-from repro.core.linear_attention import (chunk_scan, chunk_summaries,
+from repro.core.linear_attention import (ChunkOutputs, chunk_summaries,
                                          pick_block, suffix_grad_combine)
+from repro.kernels import ops as _ops
 
 
 @dataclass(frozen=True)
@@ -64,12 +71,15 @@ class SPConfig:
     ``comm_strategy`` / ``overlap`` are the default exchange strategy and
     overlap mode for layers run under this config (overridable per call
     on :func:`lasp2`); see ``repro/comm/strategy.py`` for the matrix.
+    ``kernel_backend`` picks the intra-chunk compute path
+    (``xla | pallas | interpret``; ``None`` = platform default).
     """
 
     mesh: Mesh
     sp_axis: str = "data"    # mesh axis the sequence dim is split over
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     overlap: str = "overlap"           # overlap | none
+    kernel_backend: Optional[str] = None   # xla | pallas | interpret
 
     @property
     def degree(self) -> int:
@@ -81,21 +91,32 @@ def _cumulative_decay(log_a):
     return jnp.exp(jnp.cumsum(log_a.astype(jnp.float32), axis=-1))
 
 
+def _intra_chunk(q, k, v, log_a, block_size, kernel_backend) -> ChunkOutputs:
+    """Intra-chunk pass, dispatched through the kernel backend
+    (``repro.kernels.ops``): the XLA ``chunk_scan`` or the (differentiable)
+    Pallas chunk kernel."""
+    o, state, log_decay = _ops.linear_attention_op(
+        q, k, v, log_a, block_size=block_size, backend=kernel_backend)
+    return ChunkOutputs(o, state, log_decay)
+
+
 # ---------------------------------------------------------------------------
 # Local (per-shard) forward bodies.
 # ---------------------------------------------------------------------------
 
 def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
-                      strategy="allgather", overlap="overlap"):
+                      strategy="allgather", overlap="overlap",
+                      kernel_backend=None):
     """Runs on each device's sequence shard. Returns output + residual pack.
 
     Ordering mirrors paper Alg. 2: the cheap chunk-summary pass produces
     the exchange payload first; the strategy's collective is then issued
-    *around* the heavy intra-chunk ``chunk_scan`` by the double-buffered
-    scheduler — with ``overlap="overlap"`` the two are dataflow
-    independent and the gather's wire time hides behind the intra-chunk
-    kernel (the paper's comm/compute overlap), with ``"none"`` the
-    exchange is barriered behind compute for A/B benchmarking.
+    *around* the heavy intra-chunk kernel (``_intra_chunk`` — XLA scan or
+    Pallas, per ``kernel_backend``) by the double-buffered scheduler —
+    with ``overlap="overlap"`` the two are dataflow independent and the
+    gather's wire time hides behind the intra-chunk kernel (the paper's
+    comm/compute overlap), with ``"none"`` the exchange is barriered
+    behind compute for A/B benchmarking.
     """
     bs = pick_block(q.shape[-2], block_size)
     # (1) cheap summary pass: M_t, A_t — only K/V/decay.
@@ -107,7 +128,7 @@ def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
     ex = get_strategy(strategy).prefix(
         m_loc, a_loc, sp_axis, axis_size, t,
         DoubleBufferedScheduler(overlap),
-        lambda: chunk_scan(q, k, v, log_a, block_size=bs))
+        lambda: _intra_chunk(q, k, v, log_a, bs, kernel_backend))
     # (4) local prefix combine + inter-chunk output.
     b = _cumulative_decay(log_a)
     o_inter = jnp.einsum(
@@ -133,21 +154,24 @@ def _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size):
 # Paper-faithful custom_vjp (Algorithms 3/4).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
 def _lasp2_causal_faithful(q, k, v, log_a, sp_axis, block_size, axis_size,
-                           overlap):
+                           overlap, kernel_backend):
     o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
-                             "allgather", overlap)
+                             "allgather", overlap, kernel_backend)
     return o
 
 
-def _faithful_fwd(q, k, v, log_a, sp_axis, block_size, axis_size, overlap):
+def _faithful_fwd(q, k, v, log_a, sp_axis, block_size, axis_size, overlap,
+                  kernel_backend):
     o, (m_prev, cum, t) = _causal_fwd_local(
-        q, k, v, log_a, sp_axis, block_size, axis_size, "allgather", overlap)
+        q, k, v, log_a, sp_axis, block_size, axis_size, "allgather", overlap,
+        kernel_backend)
     return o, (q, k, v, log_a, m_prev, cum, t)
 
 
-def _faithful_bwd(sp_axis, block_size, axis_size, overlap, res, do):
+def _faithful_bwd(sp_axis, block_size, axis_size, overlap, kernel_backend,
+                  res, do):
     q, k, v, log_a, m_prev, cum, t = res
     bs = pick_block(q.shape[-2], block_size)
     dof = do.astype(jnp.float32)
@@ -163,9 +187,11 @@ def _faithful_bwd(sp_axis, block_size, axis_size, overlap, res, do):
 
     # Intra-chunk + local state-contribution gradients (Alg. 4 lines 5–7,
     # 10–11). Computed by re-running the local chunk pass under VJP — the
-    # recompute mirrors the paper's activation-checkpointing remark.
+    # recompute mirrors the paper's activation-checkpointing remark. The
+    # pullback pulls on BOTH outputs (o and the end-of-chunk state) — on
+    # the Pallas backends this hits the chunk kernel's custom_vjp.
     def local_parts(q_, k_, v_):
-        out = chunk_scan(q_, k_, v_, log_a, block_size=bs)
+        out = _intra_chunk(q_, k_, v_, log_a, bs, kernel_backend)
         return out.o, out.state
 
     _, pull = jax.vjp(local_parts, q, k, v)
@@ -219,14 +245,15 @@ _lasp2_noncausal_faithful.defvjp(_nc_fwd, _nc_bwd)
 # ---------------------------------------------------------------------------
 
 def _lasp2_causal_autodiff(q, k, v, log_a, sp_axis, block_size, axis_size,
-                           strategy, overlap):
+                           strategy, overlap, kernel_backend):
     o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
-                             strategy, overlap)
+                             strategy, overlap, kernel_backend)
     return o
 
 
 def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
-                     block_size: int = 128):
+                     block_size: int = 128,
+                     kernel_backend: Optional[str] = None):
     """Causal LASP-2 forward that also returns the end-of-sequence memory
     state (used by prefill to seed the decode cache). No custom_vjp —
     prefill is inference-only. Always the "allgather" strategy: the end
@@ -234,9 +261,12 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
     for free."""
     if log_a is None:
         log_a = jnp.zeros(q.shape[:-1], dtype=jnp.float32)
+    if kernel_backend is None and sp is not None:
+        kernel_backend = sp.kernel_backend
     if sp is None or sp.degree == 1:
-        out = chunk_scan(q, k, v, log_a,
-                         block_size=pick_block(q.shape[-2], block_size))
+        out = _intra_chunk(q, k, v, log_a,
+                           pick_block(q.shape[-2], block_size),
+                           kernel_backend)
         return out.o, out.state
 
     axis = sp.sp_axis
@@ -248,7 +278,7 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         t = jax.lax.axis_index(axis)
         ex = get_strategy("allgather").prefix(
             m_loc, a_loc, axis, w, t, DoubleBufferedScheduler(sp.overlap),
-            lambda: chunk_scan(q_, k_, v_, la_, block_size=bs))
+            lambda: _intra_chunk(q_, k_, v_, la_, bs, kernel_backend))
         b = _cumulative_decay(la_)
         o = ex.intra.o.astype(jnp.float32) + jnp.einsum(
             "...sk,...kv->...sv", q_.astype(jnp.float32) * b[..., None],
@@ -278,7 +308,8 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
           causal: bool = True, block_size: int = 128,
           backward: str = "faithful",
           comm_strategy: Optional[str] = None,
-          overlap: Optional[str] = None):
+          overlap: Optional[str] = None,
+          kernel_backend: Optional[str] = None):
     """Chunked linear attention with LASP-2 sequence parallelism.
 
     Args:
@@ -299,13 +330,22 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
       overlap: "overlap" (double-buffered, default) or "none" (exchange
         barriered behind intra-chunk compute — the A/B baseline).
         ``None`` → ``sp.overlap``.
+      kernel_backend: intra-chunk compute path — "xla" (``chunk_scan``),
+        "pallas" (fused TPU kernel, trainable via its two-pass backward),
+        "interpret" (Pallas interpret mode, for CPU tests).
+        ``None`` → ``sp.kernel_backend``, then the platform default.
+        Collectives are untouched by this knob (the HLO budget tests pin
+        that: still exactly one forward all-gather per layer).
     """
     if log_a is None:
         log_a = jnp.zeros(q.shape[:-1], dtype=jnp.float32)
+    if kernel_backend is None and sp is not None:
+        kernel_backend = sp.kernel_backend
+    kb = _ops.resolve_backend(kernel_backend)
     if sp is None or sp.degree == 1:
         if causal:
-            return chunk_scan(q, k, v, log_a,
-                              block_size=pick_block(q.shape[-2], block_size)).o
+            return _intra_chunk(q, k, v, log_a,
+                                pick_block(q.shape[-2], block_size), kb).o
         m_tot, _ = chunk_summaries(
             k, v, None, block_size=pick_block(q.shape[-2], block_size))
         # no-decay bidirectional total state
@@ -335,11 +375,12 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         if backward == "faithful":
             def mapped(q_, k_, v_, la_):
                 return _lasp2_causal_faithful(q_, k_, v_, la_, axis,
-                                              block_size, w, ovl)
+                                              block_size, w, ovl, kb)
         else:
             def mapped(q_, k_, v_, la_):
                 return _lasp2_causal_autodiff(q_, k_, v_, la_, axis,
-                                              block_size, w, strategy, ovl)
+                                              block_size, w, strategy, ovl,
+                                              kb)
 
         return _shard_map(
             mapped, mesh=sp.mesh,

@@ -71,7 +71,8 @@ def causal_mask(sq, sk, q_offset, *, sliding_window: Optional[int] = None,
 def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
                                 causal: bool = True,
                                 sliding_window: Optional[int] = None,
-                                scale: Optional[float] = None):
+                                scale: Optional[float] = None,
+                                kernel_backend: Optional[str] = None):
     """Paper Algorithm 7: AllGather-based context parallelism.
 
     q: (B, Hq, S, dh), k/v: (B, Hkv, S, dh) — S is the global sequence and
@@ -79,16 +80,24 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
     V (sizes C×d per chunk — small under GQA); backward (via autodiff) emits
     the mirrored reduce-scatter on dK/dV, matching Megatron's AG/RS pairing
     shown in paper Fig. 2.
+
+    ``kernel_backend`` (``None`` → ``sp.kernel_backend``, then the
+    platform default) applies to the degree-1 path, which dispatches
+    through ``repro.kernels.ops.flash_attention_op``. The sharded local
+    attention keeps the XLA mask path: its query offset ``t·C`` is a
+    traced per-rank scalar, which the flash kernel's static ``q_offset``
+    cannot express.
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
+    if kernel_backend is None and sp is not None:
+        kernel_backend = sp.kernel_backend
 
     if sp is None or sp.degree == 1:
-        mask = None
-        if causal:
-            mask = causal_mask(q.shape[-2], k.shape[-2], 0,
-                               sliding_window=sliding_window)[None, None]
-        return _softmax_attend(q, k, v, scale=scale, mask=mask)
+        from repro.kernels import ops as _ops
+        return _ops.flash_attention_op(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            scale=scale, backend=kernel_backend)
 
     axis = sp.sp_axis
     w = sp.degree
@@ -109,6 +118,13 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         if causal:
             mask = causal_mask(c, w * c, t * c,
                                sliding_window=sliding_window)[None, None]
+        elif sliding_window is not None:
+            # Non-causal + window: one-sided window bound only — the same
+            # semantics as the degree-1 flash_attention_op path, so output
+            # is invariant to the SP degree.
+            qpos = t * c + jnp.arange(c)[:, None]
+            kpos = jnp.arange(w * c)[None, :]
+            mask = ((qpos - kpos) < sliding_window)[None, None]
         return _softmax_attend(q_, kg, vg, scale=scale, mask=mask)
 
     spec = P(None, None, axis, None)

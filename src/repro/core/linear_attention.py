@@ -160,10 +160,15 @@ def _block_terms(q, k, v, log_a):
     laf = log_a.astype(jnp.float32)
     cb = jnp.cumsum(laf, axis=-1)                      # (..., C) inclusive
     a_blk = cb[..., -1]
-    # D_ij = exp(cb_i - cb_j) for i >= j else 0  (i: query pos, j: key pos)
+    # D_ij = exp(cb_i - cb_j) for i >= j else 0  (i: query pos, j: key pos).
+    # The exponent is neutralized on the masked region with ``where``, NOT
+    # clamped with ``minimum``: on the kept region diff <= 0 already
+    # (log_a <= 0), and at log_a == 0 a clamp sits exactly on the min tie,
+    # where jax's tie-splitting gradient would silently halve d log_a —
+    # the kernel-grad parity tests pin the exact derivative.
     diff = cb[..., :, None] - cb[..., None, :]
     mask = jnp.tril(jnp.ones(diff.shape[-2:], bool))
-    decay_mat = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    decay_mat = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
     scores = jnp.einsum("...ik,...jk->...ij", qf, kf) * decay_mat
     o_intra = jnp.einsum("...ij,...jv->...iv", scores, vf)
     # State contribution decayed to block end: weight exp(cb_C - cb_i) <= 1.
@@ -244,6 +249,8 @@ def chunk_summaries(k, v, log_a=None, *, block_size=128):
     dv = v.shape[-1]
     if log_a is None:
         log_a = jnp.zeros((*lead, S), dtype=jnp.float32)
+    if S % block_size:
+        raise ValueError(f"S={S} not divisible by block_size={block_size}")
     nb = S // block_size
 
     def body(carry, xs):
@@ -282,8 +289,10 @@ def prefix_state_combine(ms, cum, t):
         cum, jnp.maximum(t - 1, 0), axis=0, keepdims=False)
     logw = cum_tm1[None] - cum                           # <= 0 for j <= t-1
     mask = (w_idx < t)
-    shape = (ms.shape[0],) + (1,) * (cum.ndim - 1)
-    w = jnp.where(mask.reshape(shape), jnp.exp(jnp.minimum(logw, 0.0)), 0.0)
+    m = jnp.broadcast_to(
+        mask.reshape((ms.shape[0],) + (1,) * (cum.ndim - 1)), logw.shape)
+    # where-masked exponent, not min-clamped — see _block_terms.
+    w = jnp.where(m, jnp.exp(jnp.where(m, logw, 0.0)), 0.0)
     return jnp.einsum("w...,w...kv->...kv", w, ms)
 
 
@@ -297,8 +306,9 @@ def suffix_grad_combine(dms, cum, t):
     cum_prev = jnp.concatenate([jnp.zeros_like(cum[:1]), cum[:-1]], axis=0)
     logw = cum_prev - cum_t[None]                        # <= 0 for t' > t
     mask = (w_idx > t)
-    shape = (dms.shape[0],) + (1,) * (cum.ndim - 1)
-    w = jnp.where(mask.reshape(shape), jnp.exp(jnp.minimum(logw, 0.0)), 0.0)
+    m = jnp.broadcast_to(
+        mask.reshape((dms.shape[0],) + (1,) * (cum.ndim - 1)), logw.shape)
+    w = jnp.where(m, jnp.exp(jnp.where(m, logw, 0.0)), 0.0)
     return jnp.einsum("w...,w...kv->...kv", w, dms)
 
 

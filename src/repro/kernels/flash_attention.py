@@ -15,6 +15,7 @@ without materializing repeated heads in HBM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +30,8 @@ DEFAULT_BLOCK_K = 128
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, causal: bool, sliding_window, nkv: int,
-            block_q: int, block_k: int):
+            scale: float, causal: bool, sliding_window, q_offset: int,
+            nkv: int, block_q: int, block_k: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -40,16 +41,22 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
+    # Query row i of this block sits at *global* position
+    # q_offset + q_start + i (q_offset = sk - sq for prefill-with-cache /
+    # ring-decode shapes; 0 when sq == sk). Key positions are global
+    # already. Masking with local q indices here was the sq != sk bug.
     q_start = iq * block_q
     k_start = ik * block_k
 
     # Causality at block granularity: skip blocks entirely above the diagonal
-    # (and, with a sliding window, blocks entirely below it).
+    # (and, with a sliding window, blocks entirely below it) — both
+    # predicates in global coordinates.
     needed = True
     if causal:
-        needed = jnp.asarray(k_start <= q_start + block_q - 1)
+        needed = jnp.asarray(k_start <= q_offset + q_start + block_q - 1)
     if sliding_window is not None:
-        lo_ok = (q_start - (k_start + block_k - 1)) < sliding_window
+        lo_ok = (q_offset + q_start - (k_start + block_k - 1)) \
+            < sliding_window
         needed = jnp.logical_and(needed, lo_ok)
 
     @pl.when(needed)
@@ -60,7 +67,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale       # (bq, bk)
-        qpos = q_start + jax.lax.broadcasted_iota(
+        qpos = q_offset + q_start + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 0)
         kpos = k_start + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
@@ -89,16 +96,25 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "sliding_window", "scale", "block_q", "block_k", "interpret"))
+    "causal", "sliding_window", "scale", "q_offset", "block_q", "block_k",
+    "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, sliding_window=None,
-                    scale=None, block_q: int = DEFAULT_BLOCK_Q,
+                    scale=None, q_offset: Optional[int] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
                     block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
-    """GQA flash attention (forward). q: (B,Hq,S,dh), k/v: (B,Hkv,Sk,dh)."""
+    """GQA flash attention (forward). q: (B,Hq,S,dh), k/v: (B,Hkv,Sk,dh).
+
+    ``q_offset``: global position of query row 0 (keys are global already).
+    Defaults to ``sk - sq`` — the prefill-with-cache convention shared
+    with the XLA mask fallback in ``repro.kernels.ops``.
+    """
     b, hq, sq, dh = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     rep = hq // hkv
     if scale is None:
         scale = dh ** -0.5
+    if q_offset is None:
+        q_offset = sk - sq
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     if sq % block_q or sk % block_k:
@@ -108,7 +124,7 @@ def flash_attention(q, k, v, *, causal: bool = True, sliding_window=None,
 
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, sliding_window=sliding_window,
-        nkv=nkv, block_q=block_q, block_k=block_k)
+        q_offset=q_offset, nkv=nkv, block_q=block_q, block_k=block_k)
     return pl.pallas_call(
         kernel,
         grid=(b, hq, nq, nkv),

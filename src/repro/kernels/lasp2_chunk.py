@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: intra-chunk decayed causal linear attention.
+"""Pallas TPU kernels: intra-chunk decayed causal linear attention, fwd+bwd.
 
 This is the compute hot-spot of LASP-2 (paper Alg. 2 lines 5–8): each
 device's local sequence chunk is processed block-by-block, carrying the
@@ -17,6 +17,26 @@ TPU adaptation of the paper's Triton kernel:
   q/k/v/o tiles (the GPU version instead re-materializes through SMEM);
 * decay math is log-space fp32; all reweighting factors are <= 1
   (see ``repro.core.linear_attention``).
+
+The backward follows Lightning Attention-2's two-pass scheme, decay
+generalized (paper Alg. 4's local lines):
+
+* ``dq`` — a forward-order pass re-carrying the prefix state ``M`` in VMEM
+  scratch (``dq_i = dO_i M_i^T``, split into the intra-block score matrix
+  and the carried inter-block term);
+* ``dk/dv/dlog_a`` — a reverse-order pass (reversed block index maps on
+  the sequential grid axis) carrying the *suffix* state gradient
+  ``N_j = Σ_{i≥j} e^{L_i−L_j} q_i^T dO_i + e^{L_S−L_j} dM``, seeded with
+  the end-of-chunk state cotangent ``dM`` — the faithful SP backward
+  (Alg. 4) pulls on both ``o`` *and* ``state``, so the kernel accepts
+  both cotangents. The decay gradient uses the log-space identity
+  ``∂L/∂log a_m = Σ_{i≥m} (dO_i·o_i − k_i·dk_i) + ⟨state, dM⟩ + dA``
+  (suffix-accumulated in scratch; the constant term is added by the
+  ``custom_vjp`` wrapper).
+
+:func:`lasp2_chunk` wraps forward+backward in ``jax.custom_vjp`` — this
+is what ``repro.kernels.ops.linear_attention_op`` dispatches to, making
+the Pallas path trainable end-to-end.
 
 Layout: inputs are flattened to ``(BH, S, d)``; grid = ``(BH, S//BLOCK)``
 with ``dimension_semantics=("parallel", "arbitrary")`` so distinct
@@ -132,3 +152,228 @@ def lasp2_chunk_fwd(q, k, v, log_a, *, block_size: int = DEFAULT_BLOCK,
         name="lasp2_chunk_fwd",
     )(q, k, v, log_a)
     return o, state, ld[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.
+# ---------------------------------------------------------------------------
+
+def _decay_mat(cb):
+    """D_ij = exp(cb_i - cb_j) for i >= j else 0 (all factors <= 1)."""
+    c = cb.shape[0]
+    diff = cb[:, None] - cb[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    return jnp.where(row >= col, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+
+
+def _bwd_dq_kernel(k_ref, v_ref, la_ref, do_ref, dq_ref, state_scratch):
+    """Forward-order pass: dq_i = dO_i M_i^T, re-carrying the prefix state."""
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        state_scratch[...] = jnp.zeros_like(state_scratch)
+
+    k = k_ref[0].astype(jnp.float32)          # (C, dk)
+    v = v_ref[0].astype(jnp.float32)          # (C, dv)
+    la = la_ref[0].astype(jnp.float32)        # (C,)
+    do = do_ref[0].astype(jnp.float32)        # (C, dv)
+
+    cb = jnp.cumsum(la)
+    a_blk = cb[-1]
+    dmat = _decay_mat(cb)
+    # intra: dq_i += sum_{j<=i} e^{cb_i-cb_j} (dO_i·v_j) k_j
+    dsc = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * dmat            # (C, C)
+    dq_intra = jax.lax.dot_general(
+        dsc, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (C, dk)
+    # inter: dq_i += e^{cb_i} dO_i M_prev^T
+    state = state_scratch[...]
+    dq_inter = jax.lax.dot_general(
+        do, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(cb)[:, None]
+    dq_ref[0] = (dq_intra + dq_inter).astype(dq_ref.dtype)
+
+    # same carry update as the forward: M <- e^A M + (k ⊙ e^{A-cb})^T v
+    kw = k * jnp.exp(a_blk - cb)[:, None]
+    state_scratch[...] = jnp.exp(a_blk) * state + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, la_ref, do_ref, o_ref, dstate_ref,
+                    dk_ref, dv_ref, dla_ref, dstate_scratch, r_scratch):
+    """Reverse-order pass carrying the suffix dstate N (+ suffix decay-grad
+    scalar). Block index maps are reversed, so program 0 sees the LAST
+    sequence block and N is seeded with the state cotangent ``dM``."""
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        dstate_scratch[...] = dstate_ref[0].astype(jnp.float32)
+        r_scratch[0, 0] = jnp.float32(0.0)
+
+    q = q_ref[0].astype(jnp.float32)          # (C, dk)
+    k = k_ref[0].astype(jnp.float32)          # (C, dk)
+    v = v_ref[0].astype(jnp.float32)          # (C, dv)
+    la = la_ref[0].astype(jnp.float32)        # (C,)
+    do = do_ref[0].astype(jnp.float32)        # (C, dv)
+    o = o_ref[0].astype(jnp.float32)          # (C, dv)
+
+    cb = jnp.cumsum(la)
+    a_blk = cb[-1]
+    dmat = _decay_mat(cb)
+    w = jnp.exp(a_blk - cb)                    # e^{A - cb_j} <= 1
+    n = dstate_scratch[...]                    # (dk, dv) suffix dstate
+
+    # dk_j = sum_{i>=j} e^{cb_i-cb_j}(dO_i·v_j) q_i + w_j (N v_j)
+    dsc = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * dmat            # (C, C)
+    dk = jax.lax.dot_general(
+        dsc, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (C, dk)
+    dk = dk + w[:, None] * jax.lax.dot_general(
+        v, n, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # dv_j = sum_{i>=j} e^{cb_i-cb_j}(q_i·k_j) dO_i + w_j (N^T k_j)
+    sc = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * dmat             # (C, C)
+    dv = jax.lax.dot_general(
+        sc, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (C, dv)
+    dv = dv + w[:, None] * jax.lax.dot_general(
+        k, n, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+    # decay grad: dlog_a_m = Σ_{i>=m} r_i (suffix over the whole sequence),
+    # r_i = dO_i·o_i − k_i·dk_i; in-block inclusive suffix cumsum + the
+    # carried sum over later blocks.
+    r = jnp.sum(do * o, axis=-1) - jnp.sum(k * dk, axis=-1)   # (C,)
+    suffix = jnp.sum(r) - jnp.cumsum(r) + r
+    dla_ref[0] = suffix + r_scratch[0, 0]
+    r_scratch[0, 0] = r_scratch[0, 0] + jnp.sum(r)
+
+    # carry to the previous block: N' = e^A N + sum_i e^{cb_i} q_i^T dO_i
+    qw = q * jnp.exp(cb)[:, None]
+    dstate_scratch[...] = jnp.exp(a_blk) * n + jax.lax.dot_general(
+        qw, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def lasp2_chunk_bwd(q, k, v, log_a, o, do, dstate, *,
+                    block_size: int = DEFAULT_BLOCK, interpret: bool = False):
+    """Backward of :func:`lasp2_chunk_fwd` wrt (q, k, v, log_a).
+
+    ``o`` is the saved forward output; ``do``/``dstate`` are the cotangents
+    of the output and the end-of-chunk state. Returns
+    ``(dq, dk, dv, dla_partial)`` where ``dla_partial`` still needs the
+    constant ``⟨state, dM⟩ + dA`` term (added by the custom_vjp wrapper,
+    which owns the ``state``/``log_decay`` residuals).
+    """
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    if s % block_size:
+        raise ValueError(f"S={s} must be divisible by block={block_size}")
+    nb = s // block_size
+
+    fwd_order = lambda b, t: (b, t, 0)
+    rev_order = lambda b, t: (b, nb - 1 - t, 0)
+
+    dq = pl.pallas_call(
+        _bwd_dq_kernel,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_size, dk), fwd_order),
+            pl.BlockSpec((1, block_size, dv), fwd_order),
+            pl.BlockSpec((1, block_size), lambda b, t: (b, t)),
+            pl.BlockSpec((1, block_size, dv), fwd_order),
+        ],
+        out_specs=pl.BlockSpec((1, block_size, dk), fwd_order),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dk), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=_compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="lasp2_chunk_bwd_dq",
+    )(k, v, log_a, do)
+
+    dk_out, dv_out, dla = pl.pallas_call(
+        _bwd_dkv_kernel,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_size, dk), rev_order),
+            pl.BlockSpec((1, block_size, dk), rev_order),
+            pl.BlockSpec((1, block_size, dv), rev_order),
+            pl.BlockSpec((1, block_size), lambda b, t: (b, nb - 1 - t)),
+            pl.BlockSpec((1, block_size, dv), rev_order),
+            pl.BlockSpec((1, block_size, dv), rev_order),
+            pl.BlockSpec((1, dk, dv), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_size, dk), rev_order),
+            pl.BlockSpec((1, block_size, dv), rev_order),
+            pl.BlockSpec((1, block_size), lambda b, t: (b, nb - 1 - t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dk), k.dtype),
+            jax.ShapeDtypeStruct((bh, s, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=_compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="lasp2_chunk_bwd_dkv",
+    )(q, k, v, log_a, do, o, dstate)
+    return dq, dk_out, dv_out, dla
+
+
+# ---------------------------------------------------------------------------
+# Differentiable entry point (custom_vjp over the two Pallas passes).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def lasp2_chunk(q, k, v, log_a, block_size=DEFAULT_BLOCK, interpret=False):
+    """Trainable chunked decayed causal linear attention (Pallas).
+
+    Same signature/returns as :func:`lasp2_chunk_fwd`, but differentiable:
+    ``jax.grad`` dispatches to the two-pass backward kernels. All three
+    outputs ``(o, state, log_decay)`` accept cotangents — the faithful SP
+    backward (paper Alg. 4) pulls on both ``o`` and ``state``.
+    """
+    return lasp2_chunk_fwd(q, k, v, log_a, block_size=block_size,
+                           interpret=interpret)
+
+
+def _chunk_vjp_fwd(q, k, v, log_a, block_size, interpret):
+    o, state, ld = lasp2_chunk_fwd(q, k, v, log_a, block_size=block_size,
+                                   interpret=interpret)
+    return (o, state, ld), (q, k, v, log_a, o, state)
+
+
+def _chunk_vjp_bwd(block_size, interpret, res, cots):
+    q, k, v, log_a, o, state = res
+    do, dstate, dld = cots
+    dq, dk, dv, dla = lasp2_chunk_bwd(
+        q, k, v, log_a, o, do, dstate.astype(jnp.float32),
+        block_size=block_size, interpret=interpret)
+    # ∂L/∂log_a_m also carries the end-of-chunk terms ⟨state, dM⟩ + dA,
+    # identical for every position m (they sit behind the full decay chain).
+    const = (jnp.einsum("bkv,bkv->b", state, dstate.astype(jnp.float32))
+             + dld.astype(jnp.float32))
+    dla = (dla + const[:, None]).astype(log_a.dtype)
+    return dq, dk, dv, dla
+
+
+lasp2_chunk.defvjp(_chunk_vjp_fwd, _chunk_vjp_bwd)

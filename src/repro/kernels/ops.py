@@ -6,39 +6,58 @@ from ``repro.core`` runs. ``backend="interpret"`` forces Pallas interpret
 mode (used by tests). The dispatch is deliberately value-free: same
 signatures, same semantics, sub-1e-3 numerical agreement enforced by
 ``tests/test_kernels.py``.
+
+All three backends of :func:`linear_attention_op` are differentiable:
+the XLA path via plain autodiff of ``chunk_scan``, the Pallas paths via
+the two-pass backward kernels behind ``lasp2_chunk``'s ``custom_vjp``
+(including the data-dependent ``log_a`` gradient and cotangents on the
+end-of-chunk ``state`` — what the faithful LASP-2 backward pulls on).
 """
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat as _compat
 from repro.core.linear_attention import (chunk_scan, pick_block,
                                          recurrent_step)
-from repro.core.lasp2h import _softmax_attend, causal_mask
 from repro.kernels import flash_attention as _flash
 from repro.kernels import lasp2_chunk as _chunk
 from repro.kernels import lasp2_decode as _decode
+
+BACKENDS = ("xla", "pallas", "interpret")
 
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def resolve_backend(backend: Optional[str]) -> str:
+    """``None`` → platform default; otherwise validate the name."""
+    if backend is None:
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; expected "
+                         f"one of {BACKENDS}")
+    return backend
+
+
 def linear_attention_op(q, k, v, log_a=None, *, block_size: int = 128,
                         backend: Optional[str] = None):
-    """Local chunked decayed causal linear attention.
+    """Local chunked decayed causal linear attention (differentiable).
 
-    q, k: (B, H, S, dk); v: (B, H, S, dv); log_a: (B, H, S) or None.
-    Returns (o, state (B,H,dk,dv) fp32, log_decay (B,H) fp32).
+    q, k: (..., S, dk); v: (..., S, dv); log_a: (..., S) or None.
+    Returns (o, state (..., dk, dv) fp32, log_decay (...,) fp32).
     """
-    backend = backend or default_backend()
-    b, h, s, dk = q.shape
+    backend = resolve_backend(backend)
+    *lead, s, dk = q.shape
     dv = v.shape[-1]
     if log_a is None:
-        log_a = jnp.zeros((b, h, s), jnp.float32)
+        log_a = jnp.zeros((*lead, s), jnp.float32)
     # Block policy is shared with core/lasp2.py (``pick_block``): the
     # preferred block when it divides S, else the largest MXU-aligned
     # divisor. Serving prefill additionally sees arbitrary prompt lengths
@@ -60,15 +79,13 @@ def linear_attention_op(q, k, v, log_a=None, *, block_size: int = 128,
                                         backend=backend)
         return o[..., :s, :], st, ld
     if backend in ("pallas", "interpret"):
-        qf = q.reshape(b * h, s, dk)
-        kf = k.reshape(b * h, s, dk)
-        vf = v.reshape(b * h, s, dv)
-        laf = log_a.reshape(b * h, s)
-        o, st, ld = _chunk.lasp2_chunk_fwd(
-            qf, kf, vf, laf, block_size=bs,
-            interpret=(backend == "interpret"))
-        return (o.reshape(b, h, s, dv), st.reshape(b, h, dk, dv),
-                ld.reshape(b, h))
+        bh = math.prod(lead)
+        o, st, ld = _chunk.lasp2_chunk(
+            q.reshape(bh, s, dk), k.reshape(bh, s, dk),
+            v.reshape(bh, s, dv), log_a.reshape(bh, s),
+            bs, backend == "interpret")
+        return (o.reshape(*lead, s, dv), st.reshape(*lead, dk, dv),
+                ld.reshape(*lead))
     out = chunk_scan(q, k, v, log_a, block_size=bs)
     return out.o, out.state, out.log_decay
 
@@ -82,7 +99,7 @@ def linear_decode_op(q, k, v, log_a, state, log_decay, *,
     Returns (o (B, H, dv) fp32, state', log_decay') — the constant-memory
     decode path: no prefix re-scan, state updated in place.
     """
-    backend = backend or default_backend()
+    backend = resolve_backend(backend)
     b, h, dk = q.shape
     dv = v.shape[-1]
     if log_a is None:
@@ -101,23 +118,39 @@ def linear_decode_op(q, k, v, log_a, state, log_decay, *,
 def flash_attention_op(q, k, v, *, causal: bool = True, sliding_window=None,
                        scale=None, backend: Optional[str] = None,
                        block_q: int = 128, block_k: int = 128):
-    """GQA softmax attention. q: (B,Hq,S,dh); k/v: (B,Hkv,Sk,dh)."""
-    backend = backend or default_backend()
-    if isinstance(sliding_window, jax.core.Tracer):
+    """GQA softmax attention. q: (B,Hq,S,dh); k/v: (B,Hkv,Sk,dh).
+
+    For ``sq != sk`` (prefill-with-cache / ring-decode shapes) queries sit
+    at global positions ``(sk - sq) + i`` — the same ``q_offset``
+    convention on the Pallas kernel and the XLA mask fallback.
+    """
+    backend = resolve_backend(backend)
+    if _compat.is_tracer(sliding_window):
         backend = "xla"   # dynamic window (hymba stacked layers) → XLA path
+    sq, sk = q.shape[2], k.shape[2]
+    q_offset = sk - sq
     if backend in ("pallas", "interpret"):
-        sq, sk = q.shape[2], k.shape[2]
         if sq % min(block_q, sq) == 0 and sk % min(block_k, sk) == 0:
             return _flash.flash_attention(
                 q, k, v, causal=causal, sliding_window=sliding_window,
-                scale=scale, block_q=block_q, block_k=block_k,
-                interpret=(backend == "interpret"))
+                scale=scale, q_offset=q_offset, block_q=block_q,
+                block_k=block_k, interpret=(backend == "interpret"))
         # fall through for awkward shapes
+    # Imported lazily: lasp2h imports core.lasp2 (SPConfig), which in turn
+    # dispatches its intra-chunk compute through this module — a top-level
+    # import here would close that cycle.
+    from repro.core.lasp2h import _softmax_attend, causal_mask
     if scale is None:
         scale = q.shape[-1] ** -0.5
     mask = None
-    if causal or sliding_window is not None:
-        mask = causal_mask(q.shape[2], k.shape[2],
-                           q_offset=k.shape[2] - q.shape[2],
+    if causal:
+        mask = causal_mask(sq, sk, q_offset=q_offset,
                            sliding_window=sliding_window)[None, None]
+    elif sliding_window is not None:
+        # Non-causal + window: the kernel applies only the one-sided
+        # window bound (no future cutoff) — mirror that here instead of
+        # sneaking the causal mask in via causal_mask.
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        mask = ((qpos - kpos) < sliding_window)[None, None]
     return _softmax_attend(q, k, v, scale=scale, mask=mask)

@@ -45,7 +45,9 @@ def flash_attention_ref(q, k, v, *, causal=True, sliding_window=None,
     vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
     s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf) * scale
     if causal or sliding_window is not None:
-        qpos = jnp.arange(sq)[:, None]
+        # Query row i is at global position (sk - sq) + i — the shared
+        # q_offset convention (kernels/ops.py) for sq != sk shapes.
+        qpos = (k.shape[2] - sq) + jnp.arange(sq)[:, None]
         kpos = jnp.arange(k.shape[2])[None, :]
         m = jnp.ones_like(s, bool)
         if causal:

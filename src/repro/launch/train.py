@@ -43,6 +43,11 @@ def main():
     ap.add_argument("--comm-overlap", default="overlap",
                     choices=["overlap", "none"],
                     help="comm/compute overlap mode (A/B benchmarking)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["xla", "pallas", "interpret"],
+                    help="intra-chunk/attention kernel path "
+                         "(repro/kernels/ops.py; default: pallas on TPU, "
+                         "xla elsewhere)")
     args = ap.parse_args()
 
     import dataclasses
@@ -68,7 +73,8 @@ def main():
                     remat=args.remat, seed=args.seed,
                     grad_compression=args.grad_compression,
                     comm_strategy=args.comm_strategy,
-                    comm_overlap=args.comm_overlap)
+                    comm_overlap=args.comm_overlap,
+                    kernel_backend=args.kernel_backend)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
                        seed=args.seed)
     plan = None
@@ -78,6 +84,7 @@ def main():
                              **auto_axis_types(1))
         plan = make_plan(mesh, "train", global_batch=args.batch,
                          n_kv_heads=cfg.n_kv_heads,
+                         backend=run.kernel_backend,
                          comm_strategy=run.comm_strategy,
                          comm_overlap=run.comm_overlap)
     state, history = train(cfg, run, data, plan=plan,

@@ -190,6 +190,12 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
     under the plan (``repro/comm``; threaded from
     ``RunConfig.comm_strategy`` by the launchers).
 
+    ``backend`` is the kernel backend (``xla | pallas | interpret``,
+    ``None`` = platform default) — it becomes both ``plan.backend`` (the
+    per-op dispatch in ``repro/kernels/ops.py``) and
+    ``SPConfig.kernel_backend`` (the intra-chunk compute inside the
+    LASP-2 ``shard_map`` bodies), so one knob moves the whole hot path.
+
     train   — batch over ("pod","data") [plain DP+FSDP], no SP.
     prefill — sequence over "data" (LASP-2/2H SP), batch over "pod".
     decode  — batch over ("pod","data"); KV-cache seq over "model" when
@@ -229,7 +235,8 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
         if data_size > 1:
             plan.sp = SPConfig(mesh=mesh, sp_axis="data",
                                comm_strategy=comm_strategy,
-                               overlap=comm_overlap)
+                               overlap=comm_overlap,
+                               kernel_backend=backend)
         return plan
 
     if shape_kind == "train":
@@ -246,7 +253,8 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
                                "seq": "data"})
             plan.sp = SPConfig(mesh=mesh, sp_axis="data",
                                comm_strategy=comm_strategy,
-                               overlap=comm_overlap)
+                               overlap=comm_overlap,
+                               kernel_backend=backend)
     elif shape_kind == "prefill":
         plan.rules = {"batch": "pod" if has_pod else None, "seq": "data",
                       "residual_seq": "data",
@@ -255,7 +263,8 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
         if data_size > 1:
             plan.sp = SPConfig(mesh=mesh, sp_axis="data",
                                comm_strategy=comm_strategy,
-                               overlap=comm_overlap)
+                               overlap=comm_overlap,
+                               kernel_backend=backend)
     elif shape_kind == "decode":
         cache_axis = tp if (tp and n_kv_heads % tp_size != 0) else None
         plan.rules = {"batch": dp, "seq": None, "heads": tp,

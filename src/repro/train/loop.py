@@ -47,7 +47,8 @@ def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
           ckpt_every: int = 50, log_every: int = 10,
           log_fn: Callable[[str], None] = print, max_steps=None):
     """Returns (final_state, history list of metric dicts)."""
-    plan = plan or Parallelism()
+    # single-device default still honours the kernel-backend knob
+    plan = plan or Parallelism(backend=run.kernel_backend)
     key = jax.random.PRNGKey(run.seed)
     state = init_state(key, cfg, run)
     start_step = 0

@@ -38,6 +38,17 @@ def test_chunk_summaries_match_state(rng):
     np.testing.assert_allclose(ld, ref.log_decay, rtol=1e-5, atol=1e-5)
 
 
+def test_chunk_summaries_rejects_indivisible_block(rng):
+    """S % block_size != 0 must raise the same clear ValueError as
+    chunk_scan (chunk_summaries used to fall through to an opaque
+    reshape failure instead of validating)."""
+    q, k, v, log_a = make_qkv(rng, s=100)
+    with pytest.raises(ValueError, match="not divisible"):
+        la.chunk_summaries(k, v, log_a, block_size=64)
+    with pytest.raises(ValueError, match="not divisible"):
+        la.chunk_scan(q, k, v, log_a, block_size=64)
+
+
 def test_initial_state_continuation(rng):
     """Semigroup: processing two halves with carried state == full pass."""
     q, k, v, log_a = make_qkv(rng)
