@@ -30,11 +30,11 @@ from repro.comm.budget import (assert_budget, lasp2_budget,
                                ring_baseline_budget)
 from repro.comm.primitives import auto_slices
 from repro.launch.hlo_analysis import collective_counts
-from repro.launch.mesh import auto_axis_types
+from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
 
 W = 8
-mesh = jax.make_mesh((W,), ("data",), **auto_axis_types(1))
-sp = SPConfig(mesh=mesh, sp_axis="data")
+mesh = make_sp_mesh(W)
+sp = SPConfig(mesh=mesh, sp_axis=SEQ_AXIS)
 B, H, d = 1, 8, 64
 
 from benchmarks.common import percentile
@@ -82,7 +82,10 @@ for S in (8192, 32768):
         hlo = compiled.as_text()
         assert_budget(hlo, budget, W)      # every case stays on-budget
         res["cases"].append({
-            "name": name, "seq_len": S,
+            # seq_len in the name: cases must be unique per name so the
+            # bench gate's row matching (scripts/bench_gate.py) never
+            # collides entries across sequence lengths
+            "name": f"{name}@S{S}", "seq_len": S,
             "wall": bench(jf, (q, k, v)),
             "comm": tape_summary(recs),
             "hlo_collectives": collective_counts(hlo, W),
@@ -113,7 +116,7 @@ def main():
         wall = case["wall"]
         comm = case["comm"]
         rows.append((
-            f"comm/{case['name']}@{case['seq_len']}",
+            f"comm/{case['name']}",
             wall["median_us"],
             f"p90={wall['p90_us']:.0f}us;"
             f"bytes={comm.get('total_bytes', 0)};"

@@ -22,9 +22,9 @@ from repro.core.lasp2 import lasp2, SPConfig
 from repro.core.baselines import lasp1, ring_attention, megatron_sp_attention
 from repro.comm import tape, tape_summary
 
-from repro.launch.mesh import auto_axis_types
-mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
-sp = SPConfig(mesh=mesh, sp_axis="data")
+from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
+mesh = make_sp_mesh(8)
+sp = SPConfig(mesh=mesh, sp_axis=SEQ_AXIS)
 B, H, d = 1, 8, 64
 
 from benchmarks.common import percentile

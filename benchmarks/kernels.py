@@ -13,7 +13,7 @@ the chunked algorithm. Emits ``BENCH_kernels.json``.
 
 from __future__ import annotations
 
-from benchmarks.common import emit, run_subprocess_bench, write_bench_json
+from benchmarks.common import emit, run_subprocess_bench
 
 BENCH_NAME = "kernels"
 

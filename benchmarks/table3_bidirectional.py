@@ -33,10 +33,7 @@ def _mlm_batch(step, seed=0):
 
 
 def _run(linear: bool):
-    import dataclasses
-
     from repro.configs.base import LayerSpec, LinearAttnConfig, ModelConfig
-    from repro.configs.base import RunConfig
     from repro.models import model as M
     from repro.optim import adamw
 

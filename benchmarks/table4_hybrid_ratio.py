@@ -7,7 +7,6 @@ monotonically-ish with hybrid ratio, most of the gain by 1/4.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 from benchmarks.common import emit

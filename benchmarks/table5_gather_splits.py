@@ -17,8 +17,8 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.linear_attention import chunk_scan, chunk_summaries
 
-from repro.launch.mesh import auto_axis_types
-mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
+from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
+mesh = make_sp_mesh(8)
 B, H, S, d = 1, 16, 65536, 128
 key = jax.random.PRNGKey(0)
 ks = jax.random.split(key, 3)
@@ -30,9 +30,9 @@ def lasp2_split(n_splits):
     def local(q_, k_, v_):
         m_loc, _ = chunk_summaries(k_, v_, None, block_size=128)
         parts = jnp.split(m_loc, n_splits, axis=1)  # split over heads
-        gathered = [jax.lax.all_gather(p, "data") for p in parts]
+        gathered = [jax.lax.all_gather(p, SEQ_AXIS) for p in parts]
         ms = jnp.concatenate(gathered, axis=2)      # (W,B,H,d,d)
-        t = jax.lax.axis_index("data")
+        t = jax.lax.axis_index(SEQ_AXIS)
         w_idx = jnp.arange(8)
         wmask = (w_idx < t).astype(jnp.float32).reshape(8, 1, 1, 1, 1)
         m_prev = jnp.sum(ms * wmask, axis=0)
@@ -40,9 +40,9 @@ def lasp2_split(n_splits):
         o = out.o.astype(jnp.float32) + jnp.einsum(
             "bhsk,bhkv->bhsv", q_.astype(jnp.float32), m_prev)
         return o.astype(q_.dtype)
-    spec = P(None, None, "data", None)
+    spec = P(None, None, SEQ_AXIS, None)
     return jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(spec,)*3,
-                                 out_specs=spec, axis_names={"data"},
+                                 out_specs=spec, axis_names={SEQ_AXIS},
                                  check_vma=False))
 
 res = {}

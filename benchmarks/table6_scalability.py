@@ -1,13 +1,17 @@
 """Paper Table 6 / Fig. 4: scalability — memory per device and linear
 sequence scaling with device count.
 
-Two parts:
+Three parts:
 (a) compiled evidence: per-device memory from the dry-run artifacts
     (results/dryrun/*.json) for each arch × shape on the 256-chip pod;
 (b) LASP-2 scaling law reproduced structurally: compile the paper's pure-
     SP workload (Linear-Llama3-1B, batch 1) at W ∈ {2,4,8} devices with
     S ∝ W and verify per-device memory stays ~constant (the paper's
-    Fig. 4 "same memory, 16× devices → 16× sequence" result).
+    Fig. 4 "same memory, 16× devices → 16× sequence" result);
+(c) Table-6-style MESH-SHAPE sweep: the 2D DP×SP train step (ZeRO-1,
+    docs/parallelism.md) compiled at every (dp, sp) split of 8 devices —
+    per-device memory, per-axis collective instruction counts, and the
+    exact ``train_step_axis_budget`` verified for each shape.
 """
 
 from __future__ import annotations
@@ -21,16 +25,16 @@ from benchmarks.common import emit, run_subprocess_bench
 _CODE = r"""
 import json
 import jax, jax.numpy as jnp
-from repro.launch.mesh import auto_axis_types
+from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
 from repro.core.lasp2 import lasp2, SPConfig
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 res = {}
 for w, s in ((2, 16384), (4, 32768), (8, 65536)):
-    mesh = jax.make_mesh((w,), ("data",), **auto_axis_types(1))
-    sp = SPConfig(mesh=mesh, sp_axis="data")
+    mesh = make_sp_mesh(w)
+    sp = SPConfig(mesh=mesh, sp_axis=SEQ_AXIS)
     B, H, d = 1, 16, 128
-    sh = NamedSharding(mesh, P(None, None, "data", None))
+    sh = NamedSharding(mesh, P(None, None, SEQ_AXIS, None))
     args = [jax.ShapeDtypeStruct((B, H, s, d), jnp.bfloat16)] * 3
 
     def f(q, k, v):
@@ -45,8 +49,53 @@ print(json.dumps(res))
 """
 
 
+_MESH_CODE = r"""
+import json
+import jax
+import numpy as np
+
+from repro.comm.budget import assert_axis_budget, train_step_axis_budget
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.hlo_analysis import collective_axis_counts
+from repro.launch.mesh import make_training_mesh
+from repro.sharding.rules import make_plan
+from repro.train.step import init_state, make_train_step
+
+cfg = get_smoke("linear-llama3-1b")
+data = SyntheticLM(cfg.vocab_size, 64, 8, seed=3)
+run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
+                warmup_steps=2, scan_unroll=True)
+res = {}
+for dp, sp in ((1, 8), (2, 4), (4, 2), (8, 1)):
+    mesh = make_training_mesh(dp, sp)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=cfg.n_kv_heads)
+    state = init_state(jax.random.PRNGKey(0), cfg, run, plan)
+    compiled = jax.jit(make_train_step(cfg, run, plan)).lower(
+        state, data.microbatched(0, 1)).compile()
+    txt = compiled.as_text()
+    budget = train_step_axis_budget(
+        mesh, n_sp_layers=cfg.n_layers, microbatches=1,
+        backward="autodiff", zero1=plan.zero1_axis is not None)
+    assert_axis_budget(txt, mesh, budget)
+    ma = compiled.memory_analysis()
+    per_dev = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    counts = {f"{op}@{'+'.join(axes) or 'none'}": n
+              for (op, axes), n in sorted(
+                  collective_axis_counts(txt, mesh).items())}
+    res[f"dp{dp}_sp{sp}"] = {"per_dev_MB": per_dev / 1e6,
+                             "collectives_by_axis": counts,
+                             "budget_verified": True}
+print(json.dumps(res))
+"""
+
+
 def main():
     rows = []
+    payload = {}
     # (a) dry-run memory table
     for path in sorted(glob.glob("results/dryrun/*16x16.json")):
         with open(path) as f:
@@ -59,13 +108,24 @@ def main():
                      f"peak_GiB_per_dev={peak:.2f}"))
     # (b) constant-memory sequence scaling
     res = run_subprocess_bench(_CODE, devices=8, timeout=900)
+    payload["seq_scaling"] = res
     vals = sorted(res.items())
     base = vals[0][1]
     for k, mb in vals:
         rows.append((f"table6/scaling/{k}", 0.0,
                      f"per_dev_MB={mb:.1f};rel={mb / base:.3f}"))
+    # (c) DP×SP mesh-shape sweep (budget-asserted in the subprocess)
+    res = run_subprocess_bench(_MESH_CODE, devices=8, timeout=1800)
+    payload["mesh_sweep"] = res
+    for k, rec in sorted(res.items()):
+        colls = ";".join(f"{op}={n}"
+                         for op, n in rec["collectives_by_axis"].items())
+        rows.append((f"table6/mesh/{k}", 0.0,
+                     f"per_dev_MB={rec['per_dev_MB']:.1f};{colls}"))
     emit(rows)
-    return rows
+    payload["rows"] = [{"name": n, "us_per_call": us, "derived": d}
+                      for n, us, d in rows]
+    return payload
 
 
 if __name__ == "__main__":

@@ -21,7 +21,6 @@ import re
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.baselines import lasp1, megatron_sp_attention
 from repro.core.lasp2 import SPConfig, lasp2
@@ -39,9 +38,9 @@ def collective_report(txt):
 
 
 def main():
-    from repro.launch.mesh import auto_axis_types
-    mesh = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
-    sp = SPConfig(mesh=mesh, sp_axis="data")
+    from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
+    mesh = make_sp_mesh(8)
+    sp = SPConfig(mesh=mesh, sp_axis=SEQ_AXIS)
     B, H, S, d = 1, 8, 65536, 64
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 3)

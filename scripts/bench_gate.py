@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""Bench-regression gate: diff fresh ``BENCH_*.json`` files against the
+committed baselines in ``benchmarks/baselines/``.
+
+The benchmarks write machine-readable payloads (see ``benchmarks/common
+.write_bench_json``); until now they were write-only — CI uploaded them
+as artifacts but nothing failed when a PR regressed them. This gate
+closes the loop:
+
+* **wall time** — any ``median_us`` / ``us_per_call`` metric more than
+  ``--wall-tol`` (default 25%) above its baseline fails. Timings under
+  ``--wall-floor-us`` (default 1000) are skipped as noise.
+* **collective traffic** — any ``*bytes*`` metric or ``hlo_collectives``
+  /``*_count``/``*_steps`` counter ABOVE its baseline fails outright
+  (these are deterministic; an increase means the comm structure
+  regressed).
+
+Rows inside ``rows``/``cases`` lists are matched by their ``name`` field,
+so reordering does not break the diff; metrics present only in the
+current payload (new cases) are ignored, metrics present only in the
+baseline fail as "missing" unless ``--allow-missing``.
+
+  python scripts/bench_gate.py                     # gate everything
+  python scripts/bench_gate.py --require comm,kernels
+  python scripts/bench_gate.py --update            # refresh baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "benchmarks" / "baselines"
+
+WALL_KEYS = ("median_us", "us_per_call")
+COUNT_KEYS = ("_count", "_steps")
+
+
+def _flatten(obj, prefix=""):
+    """path -> numeric value; list items keyed by their "name" field when
+    present (order-independent row matching). Duplicate names within one
+    list get a positional suffix so colliding entries cannot silently
+    overwrite each other (they then match by order, not name)."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(obj, list):
+        seen = {}
+        for i, item in enumerate(obj):
+            key = item.get("name", str(i)) if isinstance(item, dict) \
+                else str(i)
+            if key in seen:
+                seen[key] += 1
+                key = f"{key}#{seen[key]}"
+            else:
+                seen[key] = 0
+            out.update(_flatten(item, f"{prefix}{key}/"))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix.rstrip("/")] = float(obj)
+    return out
+
+
+def _classify(path: str):
+    """'wall' | 'traffic' | None (ungated metric)."""
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in WALL_KEYS:
+        return "wall"
+    if "bytes" in leaf or leaf.endswith(COUNT_KEYS) \
+            or "/hlo_collectives/" in f"/{path}/":
+        return "traffic"
+    return None
+
+
+def gate_one(name: str, baseline: dict, current: dict, *, wall_tol: float,
+             wall_floor_us: float, allow_missing: bool):
+    base, cur = _flatten(baseline), _flatten(current)
+    failures, checked = [], 0
+    for path, bval in base.items():
+        kind = _classify(path)
+        if kind is None:
+            continue
+        if path not in cur:
+            if not allow_missing:
+                failures.append(f"{name}: {path} missing from current run")
+            continue
+        cval = cur[path]
+        checked += 1
+        if kind == "wall":
+            if bval < wall_floor_us:
+                continue
+            if cval > bval * (1.0 + wall_tol):
+                failures.append(
+                    f"{name}: {path} wall-time regression "
+                    f"{bval:.0f} -> {cval:.0f} us "
+                    f"(+{(cval / bval - 1) * 100:.0f}% > "
+                    f"{wall_tol * 100:.0f}%)")
+        else:   # traffic: any increase fails
+            if cval > bval + 0.5:
+                failures.append(
+                    f"{name}: {path} collective increase "
+                    f"{bval:.0f} -> {cval:.0f}")
+    return failures, checked
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--current-dir", default=str(ROOT),
+                    help="where the fresh BENCH_*.json live")
+    ap.add_argument("--wall-tol", type=float, default=0.25,
+                    help="relative median wall-time regression allowed")
+    ap.add_argument("--wall-floor-us", type=float, default=1000.0,
+                    help="skip wall metrics whose baseline is below this")
+    ap.add_argument("--require", default=None,
+                    help="comma-separated bench names that MUST be "
+                         "present in the current run (e.g. comm,kernels); "
+                         "other baselines are gated only if present")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="ignore metrics present only in the baseline")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current BENCH_*.json over the baselines")
+    args = ap.parse_args()
+
+    baseline_dir = Path(args.baseline_dir)
+    current_dir = Path(args.current_dir)
+    required = set(args.require.split(",")) if args.require else None
+
+    if args.update:
+        baseline_dir.mkdir(parents=True, exist_ok=True)
+        n = 0
+        for p in sorted(current_dir.glob("BENCH_*.json")):
+            shutil.copy(p, baseline_dir / p.name)
+            n += 1
+        print(f"updated {n} baseline(s) in {baseline_dir}")
+        return 0
+
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines in {baseline_dir}; run with --update first")
+        return 1
+
+    failures, n_checked = [], 0
+    seen = set()
+    for bpath in baselines:
+        name = bpath.stem.replace("BENCH_", "")
+        seen.add(name)
+        cpath = current_dir / bpath.name
+        if not cpath.exists():
+            if required is not None and name in required:
+                failures.append(f"{name}: required bench produced no "
+                                f"{bpath.name}")
+            else:
+                print(f"  - {name}: no current run, skipped")
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(cpath) as f:
+            current = json.load(f)
+        fails, checked = gate_one(
+            name, baseline, current, wall_tol=args.wall_tol,
+            wall_floor_us=args.wall_floor_us,
+            allow_missing=args.allow_missing)
+        failures += fails
+        n_checked += checked
+        print(f"  - {name}: {checked} gated metrics, "
+              f"{len(fails)} failure(s)")
+    if required is not None:
+        for name in sorted(required - seen):
+            failures.append(f"{name}: required bench has no committed "
+                            f"baseline")
+
+    if failures:
+        print(f"\nBENCH GATE FAILED ({len(failures)}):")
+        print("\n".join(f"  ✗ {f}" for f in failures))
+        return 1
+    print(f"\nBENCH GATE OK: {n_checked} metrics within budget.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional
 
-from repro.launch.hlo_analysis import (_COLL_OPS, collective_counts,
+from repro.launch.hlo_analysis import (_COLL_OPS, collective_axis_counts,
+                                       collective_counts,
                                        parse_collectives)
 
 
@@ -105,6 +106,88 @@ def assert_budget(hlo_text: str, budget: CollectiveBudget,
         note = f" ({budget.note})" if budget.note else ""
         raise AssertionError(
             "collective budget violated" + note + ":\n  "
+            + "\n  ".join(violations))
+
+
+# ---------------------------------------------------------------------------
+# Per-axis budgets (2D DP×SP training, docs/parallelism.md).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AxisBudget:
+    """Exact expected counts per (collective op, spanned mesh axes).
+
+    Keys are ``(op, axes)`` with ``axes`` the mesh-ordered tuple of axis
+    names the collective's replica groups span
+    (``hlo_analysis.group_axes``). ``strict=True``: any collective with a
+    key not listed is a violation."""
+
+    counts: Mapping[tuple, int]
+    strict: bool = True
+    note: str = ""
+
+
+def train_step_axis_budget(mesh, *, n_sp_layers: int, microbatches: int = 1,
+                           backward: str = "autodiff",
+                           zero1: bool = True) -> AxisBudget:
+    """What one compiled (scan-unrolled) 2D DP×SP train step may put on
+    the wire — the LASP-2 composition claim written down:
+
+    * per LASP-2 layer × microbatch, over ``sequence`` ONLY: 1 forward
+      all-gather of the packed ``(M_t, A_t)`` states, plus the backward's
+      1 reduce-scatter (autodiff transpose) or 1 all-gather of ``dM_t``
+      (the paper-faithful Alg. 4).
+    * exactly 1 gradient reduction touching ``data`` per step: the packed
+      flat-gradient all-reduce (it legitimately spans ``sequence`` too —
+      token shards contribute partial gradients).
+    * ZeRO-1 only: 1 all-gather over ``data`` (the parameter re-assembly
+      after the sharded optimizer update).
+    """
+    nontrivial = tuple(n for n in mesh.axis_names if mesh.shape[n] > 1)
+    dp = mesh.shape.get("data", 1)
+    sp = mesh.shape.get("sequence", 1)
+    counts: Dict[tuple, int] = {}
+    if sp > 1 and n_sp_layers:
+        per_pass = n_sp_layers * microbatches
+        if backward == "faithful":
+            counts[("all-gather", ("sequence",))] = 2 * per_pass
+        else:
+            counts[("all-gather", ("sequence",))] = per_pass
+            counts[("reduce-scatter", ("sequence",))] = per_pass
+    counts[("all-reduce", nontrivial)] = 1
+    if zero1 and dp > 1:
+        counts[("all-gather", ("data",))] = \
+            counts.get(("all-gather", ("data",)), 0) + 1
+    return AxisBudget(counts, note=f"dp={dp} sp={sp} "
+                                   f"layers={n_sp_layers} A={microbatches}")
+
+
+def check_axis_budget(hlo_text: str, mesh,
+                      budget: AxisBudget) -> List[str]:
+    """Human-readable violations of an :class:`AxisBudget` (empty list =
+    within budget)."""
+    got = collective_axis_counts(hlo_text, mesh)
+    violations = []
+    for key, expected in budget.counts.items():
+        if got.get(key, 0) != expected:
+            violations.append(
+                f"{key[0]} over {key[1] or ('<none>',)}: expected exactly "
+                f"{expected}, compiled HLO has {got.get(key, 0)}")
+    if budget.strict:
+        for key, n in got.items():
+            if key not in budget.counts and n:
+                violations.append(
+                    f"{key[0]} over {key[1] or ('<none>',)}: expected "
+                    f"none, compiled HLO has {n}")
+    return violations
+
+
+def assert_axis_budget(hlo_text: str, mesh, budget: AxisBudget) -> None:
+    violations = check_axis_budget(hlo_text, mesh, budget)
+    if violations:
+        note = f" ({budget.note})" if budget.note else ""
+        raise AssertionError(
+            "per-axis collective budget violated" + note + ":\n  "
             + "\n  ".join(violations))
 
 

@@ -129,6 +129,21 @@ def reduce_scatter_grads(x, axis: str, *, axis_size: int,
                                 tiled=tiled)
 
 
+def psum_packed(x, axes, *, group_size: int, tag: str = ""):
+    """All-reduce ``x`` over ``axes`` (a mesh axis name or tuple of them)
+    in ONE collective — the 2D train step's single gradient reduction
+    (all microbatch-accumulated gradients plus the loss/token counters are
+    raveled into one fp32 vector first; see ``repro.train.step``).
+
+    Traffic per device (ring model): ``2(g-1)/g × payload``.
+    """
+    pb = _nbytes(x)
+    _record(CommRecord("all-reduce", pb,
+                       2 * (group_size - 1) * pb // max(group_size, 1),
+                       steps=1, group=group_size, tag=tag))
+    return jax.lax.psum(x, axes)
+
+
 # ---------------------------------------------------------------------------
 # Ring / pipelined prefix-scan exchanges (LASP-1 pattern, ZeCO refinement).
 # ---------------------------------------------------------------------------

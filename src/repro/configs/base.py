@@ -8,9 +8,8 @@ here. A "cell" = (arch × shape); the dry-run and roofline iterate cells.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 def _round_up(x: int, m: int) -> int:
@@ -264,6 +263,11 @@ class RunConfig:
     # SP communication subsystem (repro/comm, docs/communication.md):
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     comm_overlap: str = "overlap"      # overlap | none (A/B benchmarking)
+    # 2D DP×SP training mesh (docs/parallelism.md): dp_degree × sp_degree
+    # devices, batch over "data" × sequence over "sequence". 0 = unset
+    # (launchers fall back to single-device or the legacy 1-D mesh).
+    dp_degree: int = 0
+    sp_degree: int = 0
     # Kernel dispatch (repro/kernels/ops.py): intra-chunk/attention compute
     # path — "xla" | "pallas" | "interpret"; None = platform default
     # (pallas on TPU, xla elsewhere).

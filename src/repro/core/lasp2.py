@@ -73,13 +73,21 @@ class SPConfig:
     on :func:`lasp2`); see ``repro/comm/strategy.py`` for the matrix.
     ``kernel_backend`` picks the intra-chunk compute path
     (``xla | pallas | interpret``; ``None`` = platform default).
+
+    ``manual=True`` means the caller is ALREADY inside a fully-manual
+    shard_map over ``sp_axis`` (the 2D DP×SP train step in
+    ``repro.train.step``): inputs are per-shard chunks and :func:`lasp2`
+    must run its local body directly — issuing the same collectives over
+    ``sp_axis`` — instead of opening a nested shard_map (nested manual
+    regions do not compose on the pinned jax).
     """
 
     mesh: Mesh
-    sp_axis: str = "data"    # mesh axis the sequence dim is split over
+    sp_axis: str = "sequence"  # mesh axis the sequence dim is split over
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     overlap: str = "overlap"           # overlap | none
     kernel_backend: Optional[str] = None   # xla | pallas | interpret
+    manual: bool = False     # caller already inside a manual region
 
     @property
     def degree(self) -> int:
@@ -289,6 +297,9 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
                            jnp.exp(jnp.minimum(logw, 0.0)), ex.states)
         return o.astype(q_.dtype), m_end
 
+    if sp.manual:
+        return local_fn(q, k, v, log_a)
+
     nd = q.ndim
     spec_qkv = P(*([None] * (nd - 2)), axis, None)
     spec_a = P(*([None] * (nd - 2)), axis)
@@ -367,6 +378,20 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         raise ValueError(
             f"comm_strategy={strategy!r} is causal-only; the bidirectional "
             "path always uses the allgather exchange")
+    if sp.manual:
+        # Already inside the train step's fully-manual shard_map: q/k/v
+        # are this rank's sequence chunks; the local bodies issue the
+        # exchange over ``axis`` directly.
+        if causal:
+            if backward == "faithful":
+                return _lasp2_causal_faithful(q, k, v, log_a, axis,
+                                              block_size, w, ovl, kb)
+            return _lasp2_causal_autodiff(q, k, v, log_a, axis, block_size,
+                                          w, strategy, ovl, kb)
+        if backward == "faithful":
+            return _lasp2_noncausal_faithful(q, k, v, axis, block_size, w)
+        return _noncausal_fwd_local(q, k, v, axis, block_size, w)[0]
+
     nd = q.ndim
     spec_qkv = P(*([None] * (nd - 2)), axis, None)
     spec_a = P(*([None] * (nd - 2)), axis)

@@ -127,6 +127,11 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
             mask = ((qpos - kpos) < sliding_window)[None, None]
         return _softmax_attend(q_, kg, vg, scale=scale, mask=mask)
 
+    if sp.manual:
+        # Already inside the 2D train step's fully-manual shard_map:
+        # q/k/v are this rank's sequence chunks (see SPConfig.manual).
+        return local_fn(q, k, v)
+
     spec = P(None, None, axis, None)
     return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec), out_specs=spec,

@@ -25,7 +25,6 @@ because ``log_a <= 0`` — no overflow, fp32 throughout.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

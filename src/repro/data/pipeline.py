@@ -15,8 +15,6 @@ documents is property-tested.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
-
 import numpy as np
 
 

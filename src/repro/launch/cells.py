@@ -159,13 +159,15 @@ def build_cell(arch: str, shape_name: str, mesh: Optional[Mesh], *,
         if mesh is not None:
             dp = int(np.prod([mesh.shape[a] for a in plan.dp_axes
                               if a in mesh.axis_names]))
-            if plan.sp is not None:   # SP-mode training: batch on pod only
+            if plan.sp is not None and not plan.manual_axes:
+                # 1-D SP-mode training: batch on pod only. (The manual 2D
+                # DP×SP plan keeps its "data"-axis dp.)
                 dp = mesh.shape.get("pod", 1)
         a = choose_microbatches(shape, dp, target=run.microbatch_tokens)
         run = dataclasses.replace(run, num_microbatches=a)
         bm = shape.global_batch // a
         state_shapes = jax.eval_shape(
-            lambda: init_state(jax.random.PRNGKey(0), cfg, run))
+            lambda: init_state(jax.random.PRNGKey(0), cfg, run, plan))
         batch = {"tokens": _sds((a, bm, shape.seq_len), jnp.int32),
                  "labels": _sds((a, bm, shape.seq_len), jnp.int32),
                  "resets": _sds((a, bm, shape.seq_len), jnp.bool_)}
@@ -272,6 +274,15 @@ def _state_shardings(state_shapes, plan: Parallelism):
     pspec = jax.tree.map(lambda s: _named(mesh, s),
                          param_specs(state_shapes["params"], plan),
                          is_leaf=lambda x: isinstance(x, P))
+    from repro.optim import adamw
+    if isinstance(state_shapes["opt"], adamw.Zero1AdamState):
+        # ZeRO-1 flat moments: sharded over the data axis; params of the
+        # manual 2D plan are replicated (param_specs above yields P()).
+        zspec = _named(mesh, P(plan.zero1_axis))
+        return {"params": pspec,
+                "opt": adamw.Zero1AdamState(m=zspec, v=zspec,
+                                            count=_named(mesh, P())),
+                "step": _named(mesh, P())}
     out = {"params": pspec,
            "opt": type(state_shapes["opt"])(
                m=jax.tree.map(lambda s: _named(mesh, s),

@@ -27,8 +27,6 @@ under results/dryrun/.
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str):
-    import jax
-    from repro.configs.base import SHAPES
     from repro.launch import hlo_analysis as H
     from repro.launch.cells import build_cell
     from repro.launch.mesh import make_production_mesh

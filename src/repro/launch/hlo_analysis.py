@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
@@ -65,12 +65,104 @@ def _group_size(line: str, total_devices: int) -> int:
     return total_devices
 
 
+def parse_replica_groups(line: str):
+    """Device-id groups of one collective instruction, or ``None`` when
+    the instruction carries no ``replica_groups`` attribute (= one group
+    of all devices).
+
+    Handles both HLO spellings: the explicit list
+    ``replica_groups={{0,1},{2,3}}`` and the iota form
+    ``replica_groups=[2,2]<=[4]`` / ``[2,2]<=[2,2]T(1,0)`` (ids =
+    ``arange(prod(dims)).reshape(dims).transpose(perm).reshape(n, g)``).
+    """
+    m = re.search(r"replica_groups=\{((?:\{[0-9, ]*\},?)*)\}", line)
+    if m:
+        groups = [[int(x) for x in g.split(",") if x.strip()]
+                  for g in re.findall(r"\{([0-9, ]*)\}", m.group(1))]
+        # ``replica_groups={}`` is XLA's spelling for ONE group of all
+        # devices — same meaning as the attribute being absent.
+        return groups or None
+    # collective-permute carries source_target_pairs instead; each (src,
+    # tgt) pair is a 2-device "group" for axis-span purposes.
+    m = re.search(r"source_target_pairs=\{((?:\{[0-9, ]*\},?)*)\}", line)
+    if m:
+        pairs = [[int(x) for x in g.split(",") if x.strip()]
+                 for g in re.findall(r"\{([0-9, ]*)\}", m.group(1))]
+        return pairs or None
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?",
+        line)
+    if m:
+        import numpy as np
+        n, g = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        return ids.reshape(n, g).tolist()
+    return None
+
+
+def group_axes(groups, mesh) -> tuple:
+    """Which mesh axes a collective's device groups span.
+
+    Returns the (mesh-ordered) tuple of axis names whose coordinate
+    varies within at least one group — e.g. on a ``(data, sequence)``
+    mesh, groups ``{{0,1,2,3},{4,5,6,7}}`` span ``("sequence",)`` and
+    ``{{0,4},...}`` span ``("data",)``. ``groups=None`` (no
+    ``replica_groups`` attribute) spans every non-trivial axis.
+    """
+    import numpy as np
+    names = tuple(mesh.axis_names)
+    devs = np.asarray(mesh.devices)
+    if groups is None:
+        return tuple(n for n, s in zip(names, devs.shape) if s > 1)
+    coord = {}
+    for idx in np.ndindex(devs.shape):
+        coord[int(devs[idx].id)] = idx
+    varying = set()
+    for g in groups:
+        unknown = [d for d in g if d not in coord]
+        if unknown:
+            # Fail loudly: silently dropping ids would misclassify the
+            # axes a collective spans and corrupt every budget built on
+            # this (e.g. a mesh over a device subset, or ids that are not
+            # the flat 0..N-1 ordering of this mesh).
+            raise ValueError(
+                f"replica group {g} names device ids {unknown} not in "
+                f"the mesh (known: {sorted(coord)})")
+        cs = [coord[d] for d in g]
+        for ax in range(len(names)):
+            if len({c[ax] for c in cs}) > 1:
+                varying.add(names[ax])
+    return tuple(n for n in names if n in varying)
+
+
+def collective_axis_counts(hlo_text: str, mesh):
+    """Instruction counts per (collective op, spanned mesh axes).
+
+    The per-axis view of :func:`collective_counts`: keys are
+    ``(op, axes)`` with ``axes`` the mesh-ordered tuple from
+    :func:`group_axes`. This is what proves the 2D DP×SP budget — e.g.
+    "every LASP-2 all-gather spans ONLY the sequence axis, exactly one
+    reduction spans data" (``repro.comm.budget.check_axis_budget``).
+    """
+    import numpy as np
+    total = int(np.asarray(mesh.devices).size)
+    counts = {}
+    for c in parse_collectives(hlo_text, total):
+        key = (c.op, group_axes(c.groups, mesh))
+        counts[key] = counts.get(key, 0) + c.count
+    return counts
+
+
 @dataclass
 class Collective:
     op: str
     result_bytes: int
     group_size: int
     count: int = 1
+    groups: Optional[List[List[int]]] = None   # device-id replica groups
 
     @property
     def traffic_bytes(self) -> float:
@@ -107,8 +199,9 @@ def parse_collectives(hlo_text: str, total_devices: int) -> List[Collective]:
         rb = _type_bytes(type_str)
         if base == "all-gather" and op.endswith("-start"):
             rb //= 2   # start ops carry (operand, result) tuple types
-        out.append(Collective(base, rb, _group_size(stripped,
-                                                    total_devices)))
+        out.append(Collective(base, rb,
+                              _group_size(stripped, total_devices),
+                              groups=parse_replica_groups(stripped)))
     return out
 
 

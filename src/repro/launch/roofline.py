@@ -101,8 +101,6 @@ def model_flops(cfg, shape) -> float:
 
 def run_one(arch: str, shape_name: str, out_dir: str, *,
             overrides=None, tag=""):
-    import jax
-
     from repro.configs.base import SHAPES
     from repro.launch import hlo_analysis as H
     from repro.launch.cells import choose_microbatches, resolve_config

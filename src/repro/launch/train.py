@@ -13,7 +13,6 @@ deterministic pipeline (batch(step) is a pure function).
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main():
@@ -36,6 +35,16 @@ def main():
     ap.add_argument("--remat", default="none", choices=["none", "full"])
     ap.add_argument("--multi-device", action="store_true",
                     help="use all local devices as a (data,) mesh")
+    ap.add_argument("--dp-degree", type=int, default=0,
+                    help="data-parallel degree of the 2D (data, sequence) "
+                         "training mesh; with --sp-degree, dp×sp must "
+                         "equal the device count (docs/parallelism.md)")
+    ap.add_argument("--sp-degree", type=int, default=0,
+                    help="sequence-parallel degree of the 2D training "
+                         "mesh (LASP-2 SP over the 'sequence' axis)")
+    ap.add_argument("--no-zero1", action="store_true",
+                    help="replicate optimizer state instead of ZeRO-1 "
+                         "sharding it over the data axis")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--comm-strategy", default="allgather",
                     choices=["allgather", "ring", "pipelined"],
@@ -49,8 +58,6 @@ def main():
                          "(repro/kernels/ops.py; default: pallas on TPU, "
                          "xla elsewhere)")
     args = ap.parse_args()
-
-    import dataclasses
 
     import jax
 
@@ -74,11 +81,32 @@ def main():
                     grad_compression=args.grad_compression,
                     comm_strategy=args.comm_strategy,
                     comm_overlap=args.comm_overlap,
-                    kernel_backend=args.kernel_backend)
+                    kernel_backend=args.kernel_backend,
+                    zero1=not args.no_zero1,
+                    dp_degree=args.dp_degree, sp_degree=args.sp_degree)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
                        seed=args.seed)
     plan = None
-    if args.multi_device and len(jax.devices()) > 1:
+    if run.dp_degree or run.sp_degree:
+        # 2D DP×SP training mesh (the paper's deployment shape): batch
+        # over "data" × sequence over "sequence", ZeRO-1 optimizer state.
+        from repro.launch.mesh import make_training_mesh
+        # whichever degree is unset is inferred from the device count
+        n_dev = len(jax.devices())
+        dp = run.dp_degree or max(n_dev // max(run.sp_degree, 1), 1)
+        sp = run.sp_degree or max(n_dev // dp, 1)
+        mesh = make_training_mesh(dp, sp)
+        mb = args.batch // args.microbatches
+        if mb % dp or args.seq % max(sp, 1):
+            raise SystemExit(
+                f"--batch/microbatches ({mb}) must divide by dp ({dp}) "
+                f"and --seq ({args.seq}) by sp ({sp})")
+        plan = make_plan(mesh, "train", global_batch=args.batch,
+                         n_kv_heads=cfg.n_kv_heads,
+                         backend=run.kernel_backend,
+                         comm_strategy=run.comm_strategy,
+                         comm_overlap=run.comm_overlap, zero1=run.zero1)
+    elif args.multi_device and len(jax.devices()) > 1:
         from repro.launch.mesh import auto_axis_types
         mesh = jax.make_mesh((len(jax.devices()),), ("data",),
                              **auto_axis_types(1))

@@ -14,8 +14,8 @@ positions, and modality inputs. All mixers consume/produce ``(B, S, d)``.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,7 @@ def softmax_apply(params, x, ctx: Ctx, *, window=None, kv_override=None):
     s_len = q.shape[-2]
     banded_ok = (plan.banded_windows and isinstance(window, int)
                  and ctx.causal and s_len % window == 0
+                 and not (sp is not None and sp.manual)
                  and (sp is None or (s_len // sp.degree) % window == 0))
     if banded_ok:
         # §Perf: banded sliding-window attention — O(S·2w) scores instead

@@ -12,7 +12,7 @@ precomputed frame/patch embeddings).
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -119,6 +119,10 @@ def forward(params, tokens, cfg: ModelConfig, plan: Optional[Parallelism]
     x = embed_lookup(params["embed"], tokens, dtype)
     x = plan.act(x, "batch", "residual_seq", None)
     positions = jnp.arange(s)
+    if plan.sp is not None and plan.sp.manual and plan.sp.degree > 1:
+        # Inside the 2D train step's fully-manual shard_map ``s`` is the
+        # per-rank sequence chunk; RoPE needs absolute positions.
+        positions = jax.lax.axis_index(plan.sp.sp_axis) * s + positions
 
     enc_out = None
     if cfg.encoder is not None:
@@ -155,18 +159,27 @@ def encode(params, frames, cfg: ModelConfig, plan, *, remat="none",
 # Loss
 # ---------------------------------------------------------------------------
 
-def lm_loss(logits, labels, *, z_coef=0.0):
-    """Mean CE over positions with label >= 0 (+ optional z-loss)."""
+def lm_loss_sum(logits, labels):
+    """Unnormalized masked CE: ``(ce_sum, n_valid, lse)`` over positions
+    with label >= 0. Shared by :func:`lm_loss` (local normalization) and
+    the manual 2D DP×SP step (``repro.train.step``), which sums across
+    shards BEFORE normalizing — keeping the two loss paths one math."""
     lf = logits.astype(jnp.float32)
     mask = labels >= 0
     lab = jnp.maximum(labels, 0)
     lse = jax.nn.logsumexp(lf, axis=-1)
     gold = jnp.take_along_axis(lf, lab[..., None], axis=-1)[..., 0]
-    ce = (lse - gold) * mask
-    n = jnp.maximum(jnp.sum(mask), 1)
-    loss = jnp.sum(ce) / n
+    ce_sum = jnp.sum((lse - gold) * mask)
+    return ce_sum, jnp.sum(mask), lse * mask
+
+
+def lm_loss(logits, labels, *, z_coef=0.0):
+    """Mean CE over positions with label >= 0 (+ optional z-loss)."""
+    ce_sum, n_valid, lse_masked = lm_loss_sum(logits, labels)
+    n = jnp.maximum(n_valid, 1)
+    loss = ce_sum / n
     if z_coef:
-        loss = loss + z_coef * jnp.sum((lse * mask) ** 2) / n
+        loss = loss + z_coef * jnp.sum(lse_masked ** 2) / n
     return loss
 
 

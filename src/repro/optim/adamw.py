@@ -3,9 +3,20 @@
 Paper hyperparameters (§4.1): Adam β1=0.9, β2=0.95, weight decay 0.1,
 grad clip 1.0, cosine schedule with linear warmup to min_lr=1e-6.
 
-ZeRO-1 note: with FSDP parameter sharding over the "data" axis, the m/v
-moments inherit the parameter shardings, which *is* optimizer-state
-sharding — no separate machinery needed.
+Two optimizer-state layouts:
+
+* :class:`AdamState` — per-leaf m/v pytrees mirroring the params. Under
+  FSDP parameter sharding the moments inherit the parameter shardings,
+  which already is optimizer-state sharding.
+* :class:`Zero1AdamState` — ZeRO-1 for the 2D DP×SP training plan
+  (replicated params): m/v live as ONE flat fp32 vector, padded to a
+  multiple of the data-parallel degree and sharded over the "data" axis.
+  Each rank updates only its 1/dp slice of the parameters
+  (:func:`zero1_update_shard`) and the updated slices are re-assembled
+  with a single all-gather over "data" — the all-gather-on-update path
+  (docs/parallelism.md). The shard math mirrors :func:`update`
+  elementwise, so ZeRO-sharded and replicated AdamW agree to fp32
+  exactness (pinned in tests/distributed_checks.py).
 """
 
 from __future__ import annotations
@@ -14,6 +25,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
 
 class AdamState(NamedTuple):
@@ -74,6 +86,65 @@ def update(grads, state: AdamState, params, *, lr, b1=0.9, b2=0.95,
     new_v = jax.tree.map(lambda t: t[2], flat,
                          is_leaf=lambda x: isinstance(x, tuple))
     return new_params, AdamState(new_m, new_v, count)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: flat, data-axis-sharded optimizer state.
+# ---------------------------------------------------------------------------
+
+class Zero1AdamState(NamedTuple):
+    """Flat fp32 Adam moments, padded to ``n_shards`` and sharded over the
+    data axis at the jit level (each rank holds a ``(L/n_shards,)`` slice
+    inside the manual train step)."""
+
+    m: jax.Array          # (L,) fp32
+    v: jax.Array          # (L,) fp32
+    count: jax.Array
+
+
+def zero1_padded_size(params, n_shards: int) -> int:
+    """Total parameter count rounded up to a multiple of ``n_shards``."""
+    n = sum(int(leaf.size) for leaf in jax.tree.leaves(params))
+    return ((n + n_shards - 1) // n_shards) * n_shards
+
+
+def zero1_init(params, n_shards: int) -> Zero1AdamState:
+    size = zero1_padded_size(params, n_shards)
+    return Zero1AdamState(m=jnp.zeros((size,), jnp.float32),
+                          v=jnp.zeros((size,), jnp.float32),
+                          count=jnp.zeros((), jnp.int32))
+
+
+def decay_mask(params) -> jax.Array:
+    """Flat fp32 mask, 1.0 where weight decay applies (:func:`_decayable`
+    by leaf path — same rule as :func:`update`). Unpadded length."""
+    ones = jax.tree_util.tree_map_with_path(
+        lambda path, p: jnp.full(p.shape,
+                                 1.0 if _decayable(path) else 0.0,
+                                 jnp.float32), params)
+    return ravel_pytree(ones)[0]
+
+
+def zero1_update_shard(grad_shard, m_shard, v_shard, param_shard,
+                       decay_shard, count, *, lr, b1=0.9, b2=0.95,
+                       eps=1e-8, weight_decay=0.1):
+    """One AdamW step on one rank's flat fp32 slice.
+
+    ``count`` is the post-increment step count (caller increments once per
+    global step). Returns ``(new_param_shard, new_m, new_v)`` — the same
+    elementwise math as :func:`update`, so the gathered result is
+    identical to the replicated optimizer."""
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+    gf = grad_shard.astype(jnp.float32)
+    m_ = b1 * m_shard + (1 - b1) * gf
+    v_ = b2 * v_shard + (1 - b2) * gf * gf
+    step_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+    if weight_decay:
+        step_ = step_ + weight_decay * decay_shard \
+            * param_shard.astype(jnp.float32)
+    return param_shard.astype(jnp.float32) - lr * step_, m_, v_
 
 
 def cosine_schedule(step, *, base_lr, warmup_steps, total_steps,

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.lasp2 import SPConfig
+from repro.launch.mesh import DATA_AXIS, POD_AXIS, SEQ_AXIS
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -76,10 +77,19 @@ class Parallelism:
     dp_axes: tuple = ("pod", "data")
     decode_cache_axis: Optional[str] = None  # shard KV-cache seq dim here
     banded_windows: bool = True    # banded sliding-window attention (§Perf)
+    # 2D DP×SP training (docs/parallelism.md): when set, the whole train
+    # step runs inside ONE fully-manual shard_map over these mesh axes —
+    # ``rules`` then describe only the jit-level INPUT placement, and
+    # ``act`` is a no-op (sharding constraints cannot appear inside the
+    # manual region; the step's collectives are all explicit).
+    manual_axes: tuple = ()
+    # ZeRO-1: mesh axis the flat optimizer state is sharded over (manual
+    # 2D plans only; None = replicated optimizer state).
+    zero1_axis: Optional[str] = None
 
     def act(self, x, *dims):
         """with_sharding_constraint by logical dim names (None = replicate)."""
-        if self.mesh is None:
+        if self.mesh is None or self.manual_axes:
             return x
         spec = P(*[self.rules.get(d) for d in dims])
         spec = fit_spec(self.mesh, x.shape, spec)
@@ -88,8 +98,17 @@ class Parallelism:
 
     def sp_for(self, seq_len: int):
         """The SP config iff the sequence length is divisible by the SP
-        degree (e.g. whisper's 1500 encoder frames stay local)."""
-        if self.sp is not None and seq_len % self.sp.degree == 0:
+        degree (e.g. whisper's 1500 encoder frames stay local).
+
+        Under a manual 2D plan the caller's ``seq_len`` is already the
+        per-shard length (the split happened at the step's shard_map), so
+        the divisibility check does not apply — the SP config is returned
+        whenever the SP axis is non-trivial."""
+        if self.sp is None:
+            return None
+        if self.sp.manual:
+            return self.sp if self.sp.degree > 1 else None
+        if seq_len % self.sp.degree == 0:
             return self.sp
         return None
 
@@ -182,7 +201,8 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
               params_bytes: Optional[int] = None,
               backend: Optional[str] = None,
               comm_strategy: str = "allgather",
-              comm_overlap: str = "overlap") -> Parallelism:
+              comm_overlap: str = "overlap",
+              zero1: bool = True) -> Parallelism:
     """Resolve the activation rules for a cell.
 
     ``comm_strategy`` / ``comm_overlap`` select the SP state-exchange
@@ -196,7 +216,12 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
     ``SPConfig.kernel_backend`` (the intra-chunk compute inside the
     LASP-2 ``shard_map`` bodies), so one knob moves the whole hot path.
 
-    train   — batch over ("pod","data") [plain DP+FSDP], no SP.
+    train   — on a 2D (data, sequence) mesh: the paper's DP×SP deployment
+              (batch over "data" × sequence over "sequence", params
+              replicated, ZeRO-1 optimizer state over "data" when
+              ``zero1``) — a *manual* plan: the whole step runs inside
+              one fully-manual shard_map (``repro.train.step``).
+              Otherwise: batch over ("pod","data") [plain DP+FSDP], no SP.
     prefill — sequence over "data" (LASP-2/2H SP), batch over "pod".
     decode  — batch over ("pod","data"); KV-cache seq over "model" when
               the KV heads don't fill the TP axis (flash-decoding).
@@ -211,14 +236,39 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
     if mesh is None:
         return local_plan(backend)
     axes = mesh.axis_names
-    has_pod = "pod" in axes
+    has_pod = POD_AXIS in axes
+    seq_ax = SEQ_AXIS if SEQ_AXIS in axes else None
+
+    if shape_kind == "train" and seq_ax is not None:
+        # 2D DP×SP training (paper §4 / Table 6). The sequence axis only
+        # ever carries the LASP-2 state exchange; the single gradient
+        # reduction and the ZeRO-1 update gather run over "data".
+        dp_ax = DATA_AXIS if DATA_AXIS in axes else None
+        plan = Parallelism(
+            mesh=mesh, backend=backend, fsdp_axis=None, tp_axis=None,
+            dp_axes=(dp_ax,) if dp_ax else (),
+            manual_axes=tuple(a for a in (dp_ax, seq_ax) if a is not None),
+            rules={"batch": dp_ax, "seq": seq_ax, "residual_seq": seq_ax,
+                   "heads": None, "kv_heads": None, "ff": None,
+                   "vocab": None, "experts": None, "cache_seq": None})
+        plan.sp = SPConfig(mesh=mesh, sp_axis=seq_ax, manual=True,
+                           comm_strategy=comm_strategy,
+                           overlap=comm_overlap, kernel_backend=backend)
+        if zero1 and dp_ax is not None and mesh.shape[dp_ax] > 1:
+            plan.zero1_axis = dp_ax
+        return plan
+
     dp = ("pod", "data") if has_pod else ("data",)
     tp = "model" if "model" in axes else None
     plan = Parallelism(mesh=mesh, backend=backend,
                        fsdp_axis="data" if "data" in axes else None,
                        tp_axis=tp, dp_axes=dp)
 
-    data_size = mesh.shape.get("data", 1)
+    # The SP axis: the canonical SEQ_AXIS when the mesh names one,
+    # otherwise "data" (the production inference meshes, where the data
+    # axis does double duty for prefill SP).
+    sp_ax = seq_ax or "data"
+    sp_size = mesh.shape.get(sp_ax, 1)
     tp_size = mesh.shape.get("model", 1) if tp else 1
 
     if (shape_kind == "prefill" and tp is not None and n_heads is not None
@@ -228,12 +278,12 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
         plan.tp_axis = None          # weights replicated on "model"
         plan.fsdp_axis = "data" if "data" in axes else None
         plan.rules = {"batch": ("pod", "model") if has_pod else "model",
-                      "seq": "data", "residual_seq": "data",
+                      "seq": sp_ax, "residual_seq": sp_ax,
                       "heads": None, "kv_heads": None,
                       "ff": None, "vocab": None, "experts": None,
-                      "cache_seq": "data"}
-        if data_size > 1:
-            plan.sp = SPConfig(mesh=mesh, sp_axis="data",
+                      "cache_seq": sp_ax}
+        if sp_size > 1:
+            plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
                                overlap=comm_overlap,
                                kernel_backend=backend)
@@ -250,18 +300,18 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
         # batch not divisible by full dp → fall back to sequence parallelism
         if global_batch % _axis_size(mesh, dp) != 0:
             plan.rules.update({"batch": "pod" if has_pod else None,
-                               "seq": "data"})
-            plan.sp = SPConfig(mesh=mesh, sp_axis="data",
+                               "seq": sp_ax})
+            plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
                                overlap=comm_overlap,
                                kernel_backend=backend)
     elif shape_kind == "prefill":
-        plan.rules = {"batch": "pod" if has_pod else None, "seq": "data",
-                      "residual_seq": "data",
+        plan.rules = {"batch": "pod" if has_pod else None, "seq": sp_ax,
+                      "residual_seq": sp_ax,
                       "heads": tp, "kv_heads": tp, "ff": tp, "vocab": tp,
-                      "experts": tp, "cache_seq": "data"}
-        if data_size > 1:
-            plan.sp = SPConfig(mesh=mesh, sp_axis="data",
+                      "experts": tp, "cache_seq": sp_ax}
+        if sp_size > 1:
+            plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
                                overlap=comm_overlap,
                                kernel_backend=backend)

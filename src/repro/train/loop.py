@@ -50,7 +50,7 @@ def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
     # single-device default still honours the kernel-backend knob
     plan = plan or Parallelism(backend=run.kernel_backend)
     key = jax.random.PRNGKey(run.seed)
-    state = init_state(key, cfg, run)
+    state = init_state(key, cfg, run, plan)
     start_step = 0
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None

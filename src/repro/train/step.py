@@ -2,22 +2,41 @@
 non-finite, optional cross-pod int8 gradient compression.
 
 ``train_step(state, batch)``:
-  state = {"params", "opt": AdamState, "step", ["err"]}
+  state = {"params", "opt": AdamState | Zero1AdamState, "step", ["err"]}
   batch = {"tokens"/"labels"/"resets": (A, B/A, S), [frames|img]: (A, ...)}
 Returns (new_state, metrics). Designed for jit with donated state.
+
+Two step flavours, selected by the plan:
+
+* **GSPMD step** (the default): plain jit — XLA places the collectives
+  from the plan's sharding constraints.
+* **Manual 2D DP×SP step** (``plan.manual_axes``, docs/parallelism.md):
+  the whole step runs inside ONE fully-manual shard_map over the
+  ``(data, sequence)`` mesh, so every collective on the wire is explicit
+  and HLO-countable (``repro.comm.budget.train_step_axis_budget``):
+
+    - per LASP-2 layer: the strategy's state exchange over ``sequence``
+      only (1 forward all-gather for "allgather"),
+    - per step: exactly ONE gradient reduction touching ``data`` — all
+      microbatch-accumulated gradients plus the loss/token counters are
+      raveled into a single fp32 vector and psum'd across the mesh,
+    - ZeRO-1 (``plan.zero1_axis``): each rank Adam-updates its 1/dp flat
+      parameter slice and ONE all-gather over ``data`` re-assembles the
+      params (the all-gather-on-update path).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map as _shard_map
 
+from repro.comm import primitives as comm_primitives
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import model as M
 from repro.optim import adamw
@@ -27,7 +46,8 @@ from repro.sharding.rules import Parallelism
 MOE_AUX_COEF = 0.01
 
 
-def init_state(key, cfg: ModelConfig, run: RunConfig):
+def init_state(key, cfg: ModelConfig, run: RunConfig,
+               plan: Optional[Parallelism] = None):
     params = M.init_params(key, cfg)
     if run.bf16_params:
         # §Perf: bf16 weight storage — halves FSDP gather traffic and
@@ -36,7 +56,11 @@ def init_state(key, cfg: ModelConfig, run: RunConfig):
         params = jax.tree.map(
             lambda x: x.astype(jnp.bfloat16)
             if (x.dtype == jnp.float32 and x.ndim >= 2) else x, params)
-    state = {"params": params, "opt": adamw.init(params),
+    if plan is not None and plan.zero1_axis is not None:
+        opt = adamw.zero1_init(params, plan.mesh.shape[plan.zero1_axis])
+    else:
+        opt = adamw.init(params)
+    state = {"params": params, "opt": opt,
              "step": jnp.zeros((), jnp.int32)}
     if run.grad_compression:
         from repro.optim.compression import init_error_buffer
@@ -105,7 +129,171 @@ def _cast_tree(params, dtype):
         if (x.dtype == jnp.float32 and x.ndim >= 2) else x, params)
 
 
+# ---------------------------------------------------------------------------
+# Manual 2D DP×SP step (data × sequence mesh).
+# ---------------------------------------------------------------------------
+
+def _local_objective_fn(cfg: ModelConfig, run: RunConfig, plan: Parallelism):
+    """Per-rank objective for the manual step: UNNORMALIZED local CE sum
+    (+ n-weighted MoE aux), so the cross-replica normalization can happen
+    AFTER the single gradient reduction (the token count rides in the
+    same packed psum)."""
+
+    def objective(params, micro):
+        if "frames" in micro or "img" in micro:
+            raise NotImplementedError(
+                "encoder/VLM aux inputs are not supported on the 2D DP×SP "
+                "training plan yet")
+        logits, aux = M.forward(params, micro["tokens"], cfg, plan,
+                                remat=run.remat, unroll=run.scan_unroll,
+                                resets=micro.get("resets"))
+        ce_sum, n_valid, _ = M.lm_loss_sum(logits, micro["labels"])
+        n = n_valid.astype(jnp.float32)
+        # n-weighted aux: after global normalization this is the
+        # token-weighted mean of the per-shard aux losses (== the global
+        # aux when shards agree; the standard DP decomposition).
+        obj = ce_sum + MOE_AUX_COEF * aux * n
+        return obj, (ce_sum, n)
+
+    return objective
+
+
+def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
+                            plan: Parallelism):
+    if run.grad_compression:
+        raise NotImplementedError(
+            "grad_compression targets pod meshes; not supported on the "
+            "2D DP×SP plan")
+    mesh = plan.mesh
+    axes = tuple(plan.manual_axes)
+    dp_ax = plan.rules.get("batch")
+    seq_ax = plan.sp.sp_axis if plan.sp is not None else None
+    zero_ax = plan.zero1_axis
+    dp = mesh.shape[dp_ax] if dp_ax is not None else 1
+    world = 1
+    for a in axes:
+        world *= mesh.shape[a]
+    objective = _local_objective_fn(cfg, run, plan)
+
+    def body(state, batch):
+        params = state["params"]
+        if run.cast_params_once:
+            compute_params = _cast_tree(params, jnp.dtype(cfg.dtype))
+        else:
+            compute_params = params
+
+        grad_fn = jax.value_and_grad(objective, has_aux=True)
+
+        def micro_body(acc, micro):
+            (_, (ce, n)), g = grad_fn(compute_params, micro)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                               acc, g)
+            return acc, (ce, n)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             compute_params)
+        grads, (ces, ns) = jax.lax.scan(
+            micro_body, zeros, batch, unroll=True if run.scan_unroll else 1)
+
+        # THE single gradient reduction: flat grads ‖ [ce_sum, n_sum] in
+        # one all-reduce across the whole mesh (data and sequence partial
+        # sums combine in the same collective).
+        flat, unravel_grads = ravel_pytree(grads)
+        packed = jnp.concatenate(
+            [flat, jnp.stack([jnp.sum(ces), jnp.sum(ns)])])
+        packed = comm_primitives.psum_packed(
+            packed, axes if len(axes) > 1 else axes[0], group_size=world,
+            tag="train.grads")
+        ce_tot = packed[-2]
+        n_tot = jnp.maximum(packed[-1], 1.0)   # all-masked batch → loss 0
+        gflat = packed[:-2] / n_tot
+
+        gnorm = jnp.sqrt(jnp.sum(gflat * gflat))
+        scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9))
+        finite = jnp.isfinite(gnorm)
+        # Fault tolerance: a non-finite step is skipped, not applied.
+        gflat = jnp.where(finite, gflat * scale, 0.0)
+        lr = adamw.cosine_schedule(
+            state["step"], base_lr=run.learning_rate,
+            warmup_steps=run.warmup_steps, total_steps=run.total_steps,
+            min_lr=run.min_lr)
+
+        opt = state["opt"]
+        if zero_ax is not None:
+            # ZeRO-1: update this rank's 1/dp flat slice, gather params.
+            pflat, unravel_params = ravel_pytree(params)
+            n_params = pflat.size
+            padded = adamw.zero1_padded_size(params, dp)
+            shard = padded // dp
+            pad = padded - n_params
+
+            def padded_slice(vec):
+                vec = jnp.concatenate(
+                    [vec.astype(jnp.float32),
+                     jnp.zeros((pad,), jnp.float32)])
+                ix = jax.lax.axis_index(zero_ax) * shard
+                return jax.lax.dynamic_slice(vec, (ix,), (shard,))
+
+            g_sh = padded_slice(gflat)
+            p_sh = padded_slice(pflat)
+            d_sh = padded_slice(adamw.decay_mask(params))
+            count = opt.count + 1
+            new_p_sh, new_m, new_v = adamw.zero1_update_shard(
+                g_sh, opt.m, opt.v, p_sh, d_sh, count, lr=lr,
+                b1=run.adam_b1, b2=run.adam_b2,
+                weight_decay=run.weight_decay)
+            new_p_sh = jnp.where(finite, new_p_sh, p_sh)
+            new_m = jnp.where(finite, new_m, opt.m)
+            new_v = jnp.where(finite, new_v, opt.v)
+            count = jnp.where(finite, count, opt.count)
+            # ZeRO-1's all-gather-on-update: the only other collective
+            # touching the data axis.
+            gathered = comm_primitives.allgather_states(
+                new_p_sh, zero_ax, axis_size=dp, gather_axis=0,
+                tiled=True, tag="zero1.param_gather")
+            new_params = unravel_params(gathered[:n_params])
+            new_opt = adamw.Zero1AdamState(new_m, new_v, count)
+        else:
+            grads_tree = unravel_grads(gflat)
+            new_params, new_opt = adamw.update(
+                grads_tree, opt, params, lr=lr, b1=run.adam_b1,
+                b2=run.adam_b2, weight_decay=run.weight_decay)
+            new_params = jax.tree.map(
+                lambda nw, o: jnp.where(finite, nw, o), new_params, params)
+            new_opt = jax.tree.map(
+                lambda nw, o: jnp.where(finite, nw, o), new_opt, opt)
+
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": ce_tot / n_tot, "grad_norm": gnorm, "lr": lr,
+                   "skipped": (~finite).astype(jnp.float32)}
+        return new_state, metrics
+
+    def train_step(state, batch):
+        rows = jax.tree.leaves(batch)[0].shape[1]
+        seq = jax.tree.leaves(batch)[0].shape[2]
+        sp = mesh.shape[seq_ax] if seq_ax is not None else 1
+        if rows % dp or seq % sp:
+            raise ValueError(
+                f"2D DP×SP step needs microbatch rows ({rows}) divisible "
+                f"by dp ({dp}) and seq len ({seq}) by sp ({sp})")
+        bspec = jax.tree.map(lambda _: P(None, dp_ax, seq_ax), batch)
+        sspec = jax.tree.map(lambda _: P(), state)
+        if zero_ax is not None:
+            sspec["opt"] = adamw.Zero1AdamState(
+                m=P(zero_ax), v=P(zero_ax), count=P())
+        mspec = {"loss": P(), "grad_norm": P(), "lr": P(), "skipped": P()}
+        return _shard_map(
+            body, mesh=mesh, in_specs=(sspec, bspec),
+            out_specs=(sspec, mspec), axis_names=set(axes),
+            check_vma=False)(state, batch)
+
+    return train_step
+
+
 def make_train_step(cfg: ModelConfig, run: RunConfig, plan: Parallelism):
+    if plan.manual_axes:
+        return _make_manual_train_step(cfg, run, plan)
     loss_fn = make_loss_fn(cfg, run, plan)
 
     def train_step(state, batch):

@@ -30,7 +30,7 @@ from repro.comm.primitives import auto_slices                    # noqa: E402
 from repro.core import linear_attention as la                    # noqa: E402
 from repro.core.baselines import lasp1                           # noqa: E402
 from repro.core.lasp2 import SPConfig, lasp2                     # noqa: E402
-from repro.launch.mesh import auto_axis_types                    # noqa: E402
+from repro.launch.mesh import SEQ_AXIS, make_sp_mesh             # noqa: E402
 
 PASSED = []
 W = 8
@@ -44,8 +44,8 @@ def check(name):
     return deco
 
 
-mesh = jax.make_mesh((W,), ("data",), **auto_axis_types(1))
-sp = SPConfig(mesh=mesh, sp_axis="data")
+mesh = make_sp_mesh(W)
+sp = SPConfig(mesh=mesh, sp_axis=SEQ_AXIS)
 B, H, S, dk, dv = 2, 4, 512, 32, 64
 ks = jax.random.split(jax.random.PRNGKey(7), 4)
 q = jax.random.normal(ks[0], (B, H, S, dk)) * 0.3
@@ -184,12 +184,12 @@ def _():
         # hand-written mirror of the autodiff backward: every rank holds a
         # full dM-like tensor; reduce-scatter sums them and returns the
         # local sequence shard.
-        return reduce_scatter_grads(x_, "data", axis_size=W,
+        return reduce_scatter_grads(x_, SEQ_AXIS, axis_size=W,
                                     scatter_axis=2, tag="check.rs")
 
     f = jax.jit(_shard_map(mapped, mesh=mesh, in_specs=(P(),),
-                           out_specs=P(None, None, "data", None),
-                           axis_names={"data"}, check_vma=False))
+                           out_specs=P(None, None, SEQ_AXIS, None),
+                           axis_names={SEQ_AXIS}, check_vma=False))
     with tape() as recs:
         txt = f.lower(x).compile().as_text()
     got = f(x)

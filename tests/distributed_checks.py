@@ -4,6 +4,12 @@ Invoked by tests/test_distributed.py in a subprocess (so the main pytest
 process keeps its single default device — the dry-run is the only place
 with 512). Each check compares a sharded computation against its
 single-device oracle. Exits non-zero on the first failure.
+
+Mesh axis names come from ``repro.launch.mesh`` (the single source of
+truth): the SP batteries shard over ``SEQ_AXIS``, the 2D DP×SP battery
+runs on a ``(DATA_AXIS, SEQ_AXIS)`` mesh. ``REPRO_TEST_MESH=AxB``
+(dp×sp, default ``2x4``) picks the 2D battery's mesh split — the CI
+matrix sweeps ``8x1 | 4x2 | 2x4``.
 """
 
 import os
@@ -17,9 +23,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax                     # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core.compat import shard_map as _shard_map
+from repro.core.compat import shard_map as _shard_map       # noqa: E402
 
 from repro.core import linear_attention as la               # noqa: E402
 from repro.core.baselines import (lasp1, megatron_sp_attention,  # noqa: E402
@@ -27,23 +33,40 @@ from repro.core.baselines import (lasp1, megatron_sp_attention,  # noqa: E402
 from repro.core.lasp2 import SPConfig, lasp2, lasp2_with_state  # noqa: E402
 from repro.core.lasp2h import (allgather_context_attention,  # noqa: E402
                                sharded_decode_attention)
-from repro.launch.mesh import make_test_mesh                 # noqa: E402
+from repro.launch.mesh import (DATA_AXIS, MODEL_AXIS, POD_AXIS,  # noqa: E402
+                               SEQ_AXIS, make_sp_mesh, make_test_mesh,
+                               make_training_mesh)
 
 PASSED = []
+SKIPPED = []
+# REPRO_2D_ONLY=1: run only the mesh-split-dependent 2D DP×SP section —
+# the CI matrix legs other than the default split set this so the
+# mesh-independent checks (identical on every leg) run exactly once.
+_2D_ONLY = os.environ.get("REPRO_2D_ONLY") == "1"
 
 
-def check(name):
+def check(name, section="base"):
     def deco(fn):
+        if _2D_ONLY and section != "2d":
+            SKIPPED.append(name)
+            return
         fn()
         PASSED.append(name)
         print(f"  ✓ {name}", flush=True)
     return deco
 
 
-from repro.launch.mesh import auto_axis_types
+def _env_mesh():
+    """(dp, sp) split of the 2D battery, from REPRO_TEST_MESH=AxB."""
+    raw = os.environ.get("REPRO_TEST_MESH", "2x4")
+    dp, sp = (int(x) for x in raw.lower().split("x"))
+    if dp * sp != 8:
+        raise SystemExit(f"REPRO_TEST_MESH={raw!r} must multiply to 8")
+    return dp, sp
 
-mesh1d = jax.make_mesh((8,), ("data",), **auto_axis_types(1))
-sp = SPConfig(mesh=mesh1d, sp_axis="data")
+
+mesh1d = make_sp_mesh(8)
+sp = SPConfig(mesh=mesh1d, sp_axis=SEQ_AXIS)
 key = jax.random.PRNGKey(1)
 B, H, S, dk, dv = 2, 4, 512, 32, 64
 ks = jax.random.split(key, 4)
@@ -142,7 +165,8 @@ def _():
     grads via autodiff, and the untouched collective budget (exactly one
     packed forward all-gather per layer)."""
     import re
-    spk = SPConfig(mesh=mesh1d, sp_axis="data", kernel_backend="interpret")
+    spk = SPConfig(mesh=mesh1d, sp_axis=SEQ_AXIS,
+                   kernel_backend="interpret")
     ref = la.sequential_oracle(q, k, v, log_a)
     o = jax.jit(lambda a, b, c, d: lasp2(a, b, c, d, sp=spk,
                                          backward="faithful"))(q, k, v, log_a)
@@ -239,7 +263,7 @@ def _():
     from repro.models import model as M
     from repro.sharding.rules import make_plan
 
-    mesh = make_test_mesh((4, 2), ("data", "model"))
+    mesh = make_test_mesh((4, 2), (DATA_AXIS, MODEL_AXIS))
     cfg = get_smoke("starcoder2-15b")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
@@ -272,7 +296,7 @@ def _():
     from repro.sharding.rules import local_plan
     _, m_ref = jax.jit(make_train_step(cfg, run, local_plan()))(s0, batch)
 
-    mesh = make_test_mesh((4, 2), ("data", "model"))
+    mesh = make_test_mesh((4, 2), (DATA_AXIS, MODEL_AXIS))
     plan = make_plan(mesh, "train", global_batch=8,
                      n_kv_heads=cfg.n_kv_heads)
     s1 = init_state(jax.random.PRNGKey(0), cfg, run)
@@ -284,7 +308,7 @@ def _():
 @check("int8 error-feedback cross-pod grad sync ~= exact mean")
 def _():
     from repro.optim.compression import compress_sync_tree
-    mesh = make_test_mesh((2, 4), ("pod", "data"))
+    mesh = make_test_mesh((2, 4), (POD_AXIS, DATA_AXIS))
     gs = jax.random.normal(ks[0], (2, 64, 64)) * 1e-3   # per-pod grads
     e0 = jnp.zeros((2, 64, 64))
 
@@ -309,7 +333,7 @@ def _():
 def _():
     from repro.configs import get_smoke
     from repro.launch.cells import build_cell
-    mesh = make_test_mesh((4, 2), ("data", "model"))
+    mesh = make_test_mesh((4, 2), (DATA_AXIS, MODEL_AXIS))
     cell = build_cell("hymba-1.5b", "train_4k", mesh,
                       cfg_override=get_smoke("hymba-1.5b"))
     compiled = cell.lower().compile()
@@ -318,5 +342,108 @@ def _():
     assert cost_analysis(compiled).get("flops", 0) > 0
 
 
+# --- 2D DP×SP training (data × sequence mesh, docs/parallelism.md) ----------
+
+from repro.configs import get_smoke                          # noqa: E402
+from repro.configs.base import RunConfig                     # noqa: E402
+from repro.data.pipeline import SyntheticLM                  # noqa: E402
+from repro.sharding.rules import local_plan, make_plan       # noqa: E402
+from repro.train.step import init_state, make_train_step     # noqa: E402
+
+DP, SP = _env_mesh()
+_cfg2d = get_smoke("linear-llama3-1b")
+_data2d = SyntheticLM(_cfg2d.vocab_size, 64, 8, seed=3)
+
+
+def _run_steps(dp, sp_deg, run, n_steps=3, zero1=True):
+    """Train ``n_steps`` on a (dp, sp) mesh; (1, 1) = single device."""
+    if (dp, sp_deg) == (1, 1):
+        plan = local_plan()
+        mesh = None
+    else:
+        mesh = make_training_mesh(dp, sp_deg)
+        plan = make_plan(mesh, "train", global_batch=8,
+                         n_kv_heads=_cfg2d.n_kv_heads, zero1=zero1)
+    state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
+    step = jax.jit(make_train_step(_cfg2d, run, plan))
+    losses = []
+    for i in range(n_steps):
+        state, m = step(state, _data2d.microbatched(i, run.num_microbatches))
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+# microbatch rows (8 / A) must divide dp — dp=8 forces A=1
+_A2D = 2 if (8 // 2) % DP == 0 else 1
+_RUN2D = RunConfig(num_microbatches=_A2D, remat="none", total_steps=10,
+                   warmup_steps=2, learning_rate=1e-3)
+
+
+@check(f"({DP},{SP}) DP×SP == (1,8) SP-only == single device (3-step loss)", section="2d")
+def _():
+    _, l_ref = _run_steps(1, 1, _RUN2D)
+    _, l_sp = _run_steps(1, 8, _RUN2D)
+    _, l_2d = _run_steps(DP, SP, _RUN2D)
+    # same global batch, same math — only the reduction grouping differs
+    np.testing.assert_allclose(l_2d, l_sp, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(l_2d, l_ref, rtol=2e-3, atol=2e-3)
+
+
+@check(f"ZeRO-1 sharded AdamW == replicated AdamW on ({DP},{SP})", section="2d")
+def _():
+    s_z, l_z = _run_steps(DP, SP, _RUN2D, n_steps=2, zero1=True)
+    s_r, l_r = _run_steps(DP, SP, _RUN2D, n_steps=2, zero1=False)
+    np.testing.assert_allclose(l_z, l_r, rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(s_z["params"]),
+                    jax.tree.leaves(s_r["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    if DP > 1:
+        from repro.optim.adamw import Zero1AdamState
+        assert isinstance(s_z["opt"], Zero1AdamState)
+
+
+@check(f"non-finite step skipped on ({DP},{SP}): params+opt.count frozen", section="2d")
+def _():
+    mesh = make_training_mesh(DP, SP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads)
+    state = init_state(jax.random.PRNGKey(0), _cfg2d, _RUN2D, plan)
+    step = jax.jit(make_train_step(_cfg2d, _RUN2D, plan))
+    state["params"]["embed"]["table"] = \
+        state["params"]["embed"]["table"].at[0, 0].set(jnp.nan)
+    before = np.asarray(state["params"]["embed"]["table"])
+    new_state, metrics = step(state, _data2d.microbatched(0, _A2D))
+    assert float(metrics["skipped"]) == 1.0
+    np.testing.assert_array_equal(
+        before[1:], np.asarray(new_state["params"]["embed"]["table"])[1:])
+    assert int(new_state["opt"].count) == 0, \
+        "skipped step must not advance the Adam step count"
+
+
+@check(f"({DP},{SP}) step HLO: per-axis collective budget holds exactly", section="2d")
+def _():
+    from repro.comm.budget import (assert_axis_budget,
+                                   train_step_axis_budget)
+    run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
+                    warmup_steps=2, scan_unroll=True)
+    mesh = make_training_mesh(DP, SP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads)
+    state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
+    step = make_train_step(_cfg2d, run, plan)
+    txt = jax.jit(step).lower(
+        state, _data2d.microbatched(0, 1)).compile().as_text()
+    # SyntheticLM packs documents → resets → the autodiff backward:
+    # per layer 1 fwd all-gather + 1 bwd reduce-scatter, sequence-only;
+    # 1 packed gradient all-reduce; 1 ZeRO-1 param all-gather over data.
+    budget = train_step_axis_budget(
+        mesh, n_sp_layers=_cfg2d.n_layers, microbatches=1,
+        backward="autodiff", zero1=plan.zero1_axis is not None)
+    assert_axis_budget(txt, mesh, budget)
+
+
 if __name__ == "__main__":
-    print(f"ALL {len(PASSED)} DISTRIBUTED CHECKS PASSED")
+    extra = f" ({len(SKIPPED)} base checks skipped: 2D-only)" \
+        if SKIPPED else ""
+    print(f"ALL {len(PASSED)} DISTRIBUTED CHECKS PASSED{extra}")

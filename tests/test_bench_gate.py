@@ -1,0 +1,131 @@
+"""Bench-regression gate: flattening, classification, pass/fail rules."""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                      "bench_gate.py")
+
+spec = importlib.util.spec_from_file_location("bench_gate", SCRIPT)
+bench_gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_gate)
+
+
+BASE = {
+    "bench": "comm",
+    "cases": [
+        {"name": "lasp2_allgather",
+         "wall": {"median_us": 90000.0, "p90_us": 110000.0},
+         "comm": {"all-gather": 917728, "all-gather_count": 1,
+                  "total_bytes": 917728},
+         "hlo_collectives": {"all-gather": 1}},
+    ],
+}
+
+
+def _mutate(**kw):
+    cur = json.loads(json.dumps(BASE))
+    case = cur["cases"][0]
+    for path, val in kw.items():
+        d = case
+        *heads, leaf = path.split(".")
+        for h in heads:
+            d = d[h]
+        d[leaf] = val
+    return cur
+
+
+def _gate(cur, **kw):
+    kw.setdefault("wall_tol", 0.25)
+    kw.setdefault("wall_floor_us", 1000.0)
+    kw.setdefault("allow_missing", False)
+    return bench_gate.gate_one("comm", BASE, cur, **kw)
+
+
+def test_flatten_matches_rows_by_name():
+    flat = bench_gate._flatten(BASE)
+    assert flat["cases/lasp2_allgather/wall/median_us"] == 90000.0
+    assert flat["cases/lasp2_allgather/comm/total_bytes"] == 917728
+
+
+def test_flatten_duplicate_names_do_not_collide():
+    obj = {"cases": [{"name": "x", "v": 1}, {"name": "x", "v": 2},
+                     {"name": "x", "v": 3}]}
+    flat = bench_gate._flatten(obj)
+    assert flat == {"cases/x/v": 1.0, "cases/x#1/v": 2.0,
+                    "cases/x#2/v": 3.0}
+
+
+def test_identical_passes():
+    fails, checked = _gate(json.loads(json.dumps(BASE)))
+    assert not fails
+    assert checked >= 4   # median, bytes, count, hlo count
+
+
+def test_small_wall_regression_passes_large_fails():
+    fails, _ = _gate(_mutate(**{"wall.median_us": 90000.0 * 1.2}))
+    assert not fails
+    fails, _ = _gate(_mutate(**{"wall.median_us": 90000.0 * 1.3}))
+    assert fails and "wall-time regression" in fails[0]
+
+
+def test_wall_improvement_passes():
+    fails, _ = _gate(_mutate(**{"wall.median_us": 100.0}))
+    assert not fails
+
+
+def test_any_byte_increase_fails():
+    fails, _ = _gate(_mutate(**{"comm.total_bytes": 917729}))
+    assert fails and "collective increase" in fails[0]
+
+
+def test_collective_count_increase_fails():
+    fails, _ = _gate(_mutate(**{"hlo_collectives.all-gather": 2}))
+    assert fails
+
+
+def test_missing_metric_fails_unless_allowed():
+    cur = json.loads(json.dumps(BASE))
+    del cur["cases"][0]["comm"]
+    fails, _ = _gate(cur)
+    assert any("missing" in f for f in fails)
+    fails, _ = _gate(cur, allow_missing=True)
+    assert not fails
+
+
+def test_cli_end_to_end(tmp_path):
+    basedir = tmp_path / "baselines"
+    curdir = tmp_path / "cur"
+    basedir.mkdir()
+    curdir.mkdir()
+    (basedir / "BENCH_comm.json").write_text(json.dumps(BASE))
+    (curdir / "BENCH_comm.json").write_text(
+        json.dumps(_mutate(**{"comm.total_bytes": 10 ** 9})))
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, "--baseline-dir", str(basedir),
+         "--current-dir", str(curdir)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "collective increase" in proc.stdout
+
+    # required bench absent from the current run → fail
+    (curdir / "BENCH_comm.json").unlink()
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, "--baseline-dir", str(basedir),
+         "--current-dir", str(curdir), "--require", "comm"],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+
+    # --update then gate → clean pass
+    (curdir / "BENCH_comm.json").write_text(json.dumps(BASE))
+    subprocess.run(
+        [sys.executable, SCRIPT, "--baseline-dir", str(basedir),
+         "--current-dir", str(curdir), "--update"], check=True)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, "--baseline-dir", str(basedir),
+         "--current-dir", str(curdir)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout

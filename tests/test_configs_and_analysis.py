@@ -1,7 +1,5 @@
 """Config registry sanity + HLO-analysis unit tests."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -119,3 +117,80 @@ def test_cost_extrapolation_recovers_linear_model():
     np.testing.assert_allclose(got.flops, want.flops)
     np.testing.assert_allclose(got.hbm_bytes, want.hbm_bytes)
     np.testing.assert_allclose(got.coll_bytes, want.coll_bytes)
+
+
+# --- per-axis replica-group classification (2D DP×SP budgets) --------------
+
+class _FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _FakeMesh:
+    """Stands in for a (2, 4) (data, sequence) mesh: device (d, s) has
+    global id d*4 + s (row-major, as make_training_mesh lays out)."""
+
+    axis_names = ("data", "sequence")
+
+    @property
+    def devices(self):
+        return np.array([[_FakeDev(d * 4 + s) for s in range(4)]
+                         for d in range(2)])
+
+
+def test_parse_replica_groups_explicit_and_iota():
+    assert H.parse_replica_groups(
+        "x = f32[2] all-reduce(y), replica_groups={{0,1,2,3},{4,5,6,7}}"
+    ) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    assert H.parse_replica_groups(
+        "x = f32[2] all-reduce(y), replica_groups=[2,4]<=[8]"
+    ) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    # transposed iota: [4,2]<=[2,4]T(1,0) -> columns of the (2,4) layout
+    assert H.parse_replica_groups(
+        "x = f32[2] all-reduce(y), replica_groups=[4,2]<=[2,4]T(1,0)"
+    ) == [[0, 4], [1, 5], [2, 6], [3, 7]]
+    assert H.parse_replica_groups("x = f32[2] add(y)") is None
+    # XLA's all-devices spellings: absent attribute OR empty braces
+    assert H.parse_replica_groups(
+        "x = f32[2] all-reduce(y), replica_groups={}, to_apply=%add"
+    ) is None
+    # collective-permute: source_target_pairs, each pair a 2-device group
+    assert H.parse_replica_groups(
+        "x = f32[2] collective-permute(y), "
+        "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}"
+    ) == [[0, 1], [1, 2], [2, 3], [3, 0]]
+
+
+def test_permute_axis_classification():
+    # a ring strictly inside the sequence axis of the (2,4) mesh must NOT
+    # be attributed to the data axis
+    mesh = _FakeMesh()
+    ring = [[0, 1], [1, 2], [2, 3], [3, 0], [4, 5], [5, 6], [6, 7], [7, 4]]
+    assert H.group_axes(ring, mesh) == ("sequence",)
+    hlo = ("%cp = f32[4] collective-permute(f32[4] %p), "
+           "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}")
+    counts = H.collective_axis_counts(hlo, mesh)
+    assert counts == {("collective-permute", ("sequence",)): 1}
+
+
+def test_group_axes_classification():
+    mesh = _FakeMesh()
+    assert H.group_axes([[0, 1, 2, 3], [4, 5, 6, 7]], mesh) == ("sequence",)
+    assert H.group_axes([[0, 4], [1, 5], [2, 6], [3, 7]], mesh) == ("data",)
+    assert H.group_axes([[0, 1, 2, 3, 4, 5, 6, 7]], mesh) \
+        == ("data", "sequence")
+    # no replica_groups attribute == every non-trivial axis
+    assert H.group_axes(None, mesh) == ("data", "sequence")
+
+
+def test_collective_axis_counts_end_to_end():
+    hlo = """
+HloModule m
+  %ag = (f32[1], f32[8]) all-gather-start(f32[1] %p), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %ar = f32[4] all-reduce(f32[4] %q), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %zg = f32[16] all-gather(f32[8] %r), replica_groups={{0,4},{1,5},{2,6},{3,7}}, dimensions={0}
+"""
+    counts = H.collective_axis_counts(hlo, _FakeMesh())
+    assert counts[("all-gather", ("sequence",))] == 1
+    assert counts[("all-reduce", ("data", "sequence"))] == 1
+    assert counts[("all-gather", ("data",))] == 1

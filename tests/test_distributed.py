@@ -9,7 +9,7 @@ def test_distributed_battery():
     script = os.path.join(os.path.dirname(__file__),
                           "distributed_checks.py")
     proc = subprocess.run([sys.executable, script], capture_output=True,
-                          text=True, timeout=1200)
+                          text=True, timeout=2400)
     sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr[-3000:])
     assert proc.returncode == 0, "distributed checks failed"

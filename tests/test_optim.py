@@ -44,6 +44,55 @@ def test_cosine_schedule():
     np.testing.assert_allclose(float(lr_end), 1e-6, rtol=1e-4)
 
 
+def test_zero1_flat_update_matches_replicated(rng):
+    """The ZeRO-1 flat shard update is the replicated AdamW, elementwise:
+    gather the per-shard results and compare against adamw.update."""
+    import numpy as np
+    from jax.flatten_util import ravel_pytree
+
+    p = {"w1": jax.random.normal(rng, (8, 6)),
+         "norm": {"scale": jnp.ones((5,))}}          # 53 params, pad to 56
+    g = jax.tree.map(lambda x: jnp.full_like(x, 0.1), p)
+    n_shards = 4
+    st = adamw.zero1_init(p, n_shards)
+    L = adamw.zero1_padded_size(p, n_shards)
+    assert L % n_shards == 0 and st.m.shape == (L,)
+
+    pflat, unravel = ravel_pytree(p)
+    gflat, _ = ravel_pytree(g)
+    pad = L - pflat.size
+    padv = lambda x: jnp.concatenate([x, jnp.zeros((pad,), jnp.float32)])
+    mask = padv(adamw.decay_mask(p))
+    pp, gp = padv(pflat), padv(gflat)
+
+    shard = L // n_shards
+    outs = []
+    for i in range(n_shards):
+        sl = slice(i * shard, (i + 1) * shard)
+        new_p, _, _ = adamw.zero1_update_shard(
+            gp[sl], st.m[sl], st.v[sl], pp[sl], mask[sl], st.count + 1,
+            lr=1e-2)
+        outs.append(new_p)
+    gathered = unravel(jnp.concatenate(outs)[:pflat.size])
+
+    ref_p, _ = adamw.update(g, adamw.init(p), p, lr=1e-2)
+    for a, b in zip(jax.tree.leaves(gathered), jax.tree.leaves(ref_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-7, atol=1e-8)
+
+
+def test_zero1_decay_mask_matches_decayable_rule(rng):
+    p = {"w1": jax.random.normal(rng, (4, 4)),
+         "norm": {"scale": jnp.ones((4,))},
+         "bias": jnp.zeros((3,))}
+    mask = adamw.decay_mask(p)
+    # ravel order is the tree-flatten order: bias, norm/scale, w1
+    import numpy as np
+    np.testing.assert_array_equal(np.asarray(mask[:3]), 0.0)    # bias
+    np.testing.assert_array_equal(np.asarray(mask[3:7]), 0.0)   # scale
+    np.testing.assert_array_equal(np.asarray(mask[7:]), 1.0)    # w1
+
+
 def test_clip_by_global_norm(rng):
     g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
     clipped, norm = adamw.clip_by_global_norm(g, 1.0)

@@ -1,8 +1,6 @@
 """Train loop: learning, checkpoint-resume determinism, crash recovery,
 non-finite-step skipping, watchdog."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
