@@ -6,8 +6,12 @@ and off (the A/B the paper's overlap claim rests on), the LASP-1-style
 ring, and the ZeCO-style pipelined ring — plus the LASP-1 baseline layer,
 this bench measures wall-clock (median/p90), reads the CommRecord tape
 (bytes/steps on the wire), counts the compiled HLO collectives, and
-asserts each strategy's collective budget. Writes ``BENCH_comm.json`` at
-the repo root (schema in docs/communication.md).
+asserts each strategy's collective budget. The sweep carries a
+``comm_dtype`` column: the allgather strategy is measured with the fp32
+and the bf16 wire (same single collective, half the bytes — the byte
+ceiling is asserted against the dtype-true tape, since XLA-CPU's
+float-normalization upcasts bf16 collectives in compiled HLO). Writes
+``BENCH_comm.json`` at the repo root (schema in docs/communication.md).
 
 The key derived quantity is the paper's: LASP-2's gather traffic is the
 same at every sequence length (state bytes only), while the per-step ring
@@ -27,7 +31,7 @@ from repro.core.lasp2 import lasp2, SPConfig
 from repro.core.baselines import lasp1
 from repro.comm import tape, tape_summary
 from repro.comm.budget import (assert_budget, lasp2_budget,
-                               ring_baseline_budget)
+                               packed_state_bytes, ring_baseline_budget)
 from repro.comm.primitives import auto_slices
 from repro.launch.hlo_analysis import collective_counts
 from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
@@ -57,35 +61,44 @@ for S in (8192, 32768):
     q = jax.random.normal(ks[0], (B, H, S, d), jnp.bfloat16) * 0.3
     k = jax.random.normal(ks[1], (B, H, S, d), jnp.bfloat16) * 0.3
     v = jax.random.normal(ks[2], (B, H, S, d), jnp.bfloat16) * 0.5
+    sb32 = packed_state_bytes(B, H, d, d, "fp32")
+    sb16 = packed_state_bytes(B, H, d, d, "bf16")
     cases = {
         "lasp2_allgather_overlap":
             (lambda a, b, c: lasp2(a, b, c, sp=sp, overlap="overlap"),
-             lasp2_budget("allgather", W)),
+             lasp2_budget("allgather", W, state_bytes=sb32), "fp32"),
         "lasp2_allgather_no_overlap":
             (lambda a, b, c: lasp2(a, b, c, sp=sp, overlap="none"),
-             lasp2_budget("allgather", W)),
+             lasp2_budget("allgather", W, state_bytes=sb32), "fp32"),
+        # the comm_dtype column: same single collective, half the bytes
+        # (ceiling asserted against the dtype-true CommRecord tape)
+        "lasp2_allgather_bf16":
+            (lambda a, b, c: lasp2(a, b, c, sp=sp, comm_dtype="bf16"),
+             lasp2_budget("allgather", W, state_bytes=sb16), "bf16"),
         "lasp2_ring":
             (lambda a, b, c: lasp2(a, b, c, sp=sp, comm_strategy="ring"),
-             lasp2_budget("ring", W)),
+             lasp2_budget("ring", W), "fp32"),
         "lasp2_pipelined":
             (lambda a, b, c: lasp2(a, b, c, sp=sp,
                                    comm_strategy="pipelined"),
-             lasp2_budget("pipelined", W, n_slices=auto_slices(d))),
+             lasp2_budget("pipelined", W, n_slices=auto_slices(d)), "fp32"),
         "lasp1_baseline":
             (lambda a, b, c: lasp1(a, b, c, sp=sp),
-             ring_baseline_budget(W)),
+             ring_baseline_budget(W), "fp32"),
     }
-    for name, (fn, budget) in cases.items():
+    for name, (fn, budget, comm_dtype) in cases.items():
         jf = jax.jit(fn)
         with tape() as recs:
             compiled = jf.lower(q, k, v).compile()
         hlo = compiled.as_text()
-        assert_budget(hlo, budget, W)      # every case stays on-budget
+        # every case stays on-budget: HLO counts + tape byte ceilings
+        assert_budget(hlo, budget, W, records=recs)
         res["cases"].append({
             # seq_len in the name: cases must be unique per name so the
             # bench gate's row matching (scripts/bench_gate.py) never
             # collides entries across sequence lengths
             "name": f"{name}@S{S}", "seq_len": S,
+            "comm_dtype": comm_dtype,
             "wall": bench(jf, (q, k, v)),
             "comm": tape_summary(recs),
             "hlo_collectives": collective_counts(hlo, W),
@@ -120,7 +133,8 @@ def main():
             wall["median_us"],
             f"p90={wall['p90_us']:.0f}us;"
             f"bytes={comm.get('total_bytes', 0)};"
-            f"steps={comm.get('total_steps', 0)}"))
+            f"steps={comm.get('total_steps', 0)};"
+            f"dtype={case.get('comm_dtype', 'fp32')}"))
     rows += [(f"comm/{n}", u, d) for n, u, d in analytic_rows()]
     emit(rows)
     # benchmarks.run writes BENCH_comm.json from this payload (the

@@ -1,14 +1,17 @@
-"""Kernel-backend A/B: pallas(interpret) vs XLA intra-chunk wall time.
+"""Kernel-backend A/B: pallas(interpret) vs XLA wall time on both hot
+paths.
 
 Measured: median/p90 per call of ``ops.linear_attention_op`` — the
-LASP-2 intra-chunk hot path — on each differentiable backend, forward
-and forward+backward (``jax.grad`` pulling on o, state and log_decay,
-i.e. what the faithful SP backward pulls on). On this CPU container the
-interpret numbers are *indicative only* (Pallas interpret mode is a
-jax-level emulator; the TPU "pallas" backend is the target) — the bench
-exists so CI tracks that the custom_vjp path stays wired and its
-relative cost trajectory across PRs. Derived: fwd/bwd FLOP counts of
-the chunked algorithm. Emits ``BENCH_kernels.json``.
+LASP-2 intra-chunk hot path — AND ``ops.flash_attention_op`` — the
+LASP-2H hybrid softmax hot path — on each differentiable backend,
+forward and forward+backward (for the linear op ``jax.grad`` pulls on
+o, state and log_decay, i.e. what the faithful SP backward pulls on;
+for flash on o). On this CPU container the interpret numbers are
+*indicative only* (Pallas interpret mode is a jax-level emulator; the
+TPU "pallas" backend is the target) — the bench exists so CI tracks
+that both custom_vjp paths stay wired and their relative cost
+trajectory across PRs. Derived: fwd/bwd FLOP counts. Emits
+``BENCH_kernels.json``.
 """
 
 from __future__ import annotations
@@ -45,20 +48,56 @@ def make_grad(backend):
 # chunked-algorithm FLOPs (per _block_terms: QK^T, scores·V, K^T V + the
 # inter-chunk (q·b)@M term), fwd; bwd re-runs ~2x that in the two passes.
 flops_fwd = 2 * S * (2 * BS * D + 2 * D * D) * BH
+
+def timeit(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return times
+
 res = {}
 for backend in ("xla", "interpret"):
     for tag, fn in (("fwd", make_fwd(backend)), ("grad", make_grad(backend))):
-        out = fn(q, k, v, la)
-        jax.block_until_ready(out)
-        times = []
-        for _ in range(5):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(q, k, v, la))
-            times.append((time.perf_counter() - t0) * 1e6)
+        times = timeit(fn, q, k, v, la)
         res[f"{backend}_{tag}"] = {
             "median_us": percentile(times, 50),
             "p90_us": percentile(times, 90),
             "flops_analytic": flops_fwd * (3 if tag == "grad" else 1),
+        }
+
+# LASP-2H flash hot path: GQA softmax attention (causal), fwd + grad
+# through the flash custom_vjp (interpret) vs XLA masked-softmax autodiff.
+FB, FHQ, FHKV, FS, FD = 1, 8, 2, 1024, 64
+fks = jax.random.split(jax.random.PRNGKey(1), 3)
+fq = jax.random.normal(fks[0], (FB, FHQ, FS, FD)) * 0.4
+fk = jax.random.normal(fks[1], (FB, FHKV, FS, FD)) * 0.4
+fv = jax.random.normal(fks[2], (FB, FHKV, FS, FD)) * 0.5
+# causal flash FLOPs: ~1/2 the dense 2·2·S²·D per head pair; bwd ~2.5x
+flash_flops_fwd = 2 * 2 * FS * FS * FD * FHQ * FB // 2
+
+def make_flash_fwd(backend):
+    return jax.jit(lambda a, b, c: ops.flash_attention_op(
+        a, b, c, causal=True, backend=backend))
+
+def make_flash_grad(backend):
+    def loss(a, b, c):
+        return jnp.sum(ops.flash_attention_op(a, b, c, causal=True,
+                                              backend=backend))
+    return jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+
+for backend in ("xla", "interpret"):
+    for tag, fn in (("fwd", make_flash_fwd(backend)),
+                    ("grad", make_flash_grad(backend))):
+        times = timeit(fn, fq, fk, fv)
+        res[f"flash_{backend}_{tag}"] = {
+            "median_us": percentile(times, 50),
+            "p90_us": percentile(times, 90),
+            "flops_analytic":
+                flash_flops_fwd * (5 if tag == "grad" else 2) // 2,
         }
 print(json.dumps(res))
 """
@@ -78,7 +117,11 @@ def main():
         "rows": [{"name": n, "us_per_call": us, "derived": d}
                  for n, us, d in rows],
         "shape": {"bh": 4, "s": 2048, "d": 64, "block": 128},
+        "flash_shape": {"b": 1, "hq": 8, "hkv": 2, "s": 1024, "dh": 64},
         "interpret_over_xla_grad": interp / max(xla, 1e-9),
+        "flash_interpret_over_xla_grad":
+            res["flash_interpret_grad"]["median_us"]
+            / max(res["flash_xla_grad"]["median_us"], 1e-9),
         "note": ("interpret backend is a CPU emulator of the Pallas "
                  "kernel — TPU 'pallas' is the production path; tracked "
                  "for wiring + trajectory, not absolute speed"),

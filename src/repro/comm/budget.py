@@ -35,9 +35,26 @@ class CollectiveBudget:
     note: str = ""
 
 
+def comm_itemsize(comm_dtype: Optional[str] = None) -> int:
+    """Bytes per element on the wire for a ``comm_dtype`` knob value
+    (derived from the single registry in ``repro.comm.primitives``)."""
+    import numpy as np
+
+    from repro.comm.primitives import wire_dtype
+    return np.dtype(wire_dtype(comm_dtype)).itemsize
+
+
+def packed_state_bytes(b: int, h: int, dk: int, dv: int,
+                       comm_dtype: Optional[str] = None) -> int:
+    """Per-device payload of the packed ``(M_t ‖ A_t)`` state exchange —
+    ``B·H·(dk·dv + 1)`` scalars in the wire dtype. What the comm_dtype
+    knob halves (bf16) while the collective *count* stays fixed."""
+    return b * h * (dk * dv + 1) * comm_itemsize(comm_dtype)
+
+
 def lasp2_budget(strategy: str, world: int, *, with_grad: bool = False,
-                 backward: str = "faithful",
-                 n_slices: int = 1) -> CollectiveBudget:
+                 backward: str = "faithful", n_slices: int = 1,
+                 state_bytes: Optional[int] = None) -> CollectiveBudget:
     """What one LASP-2 layer is allowed to put on the wire.
 
     forward only:
@@ -48,16 +65,39 @@ def lasp2_budget(strategy: str, world: int, *, with_grad: bool = False,
       allgather faithful → +1 all-gather (Alg. 4's dM gather)
       allgather autodiff → +1 reduce-scatter (AD transpose of the gather)
       ring/pipelined     → the permutes transpose 1:1 (total doubles)
+
+    ``state_bytes`` (see :func:`packed_state_bytes`): per-device payload
+    of one exchange in the *wire* dtype — when given, the budget also
+    pins per-op traffic ceilings under the ring cost model, so a
+    comm_dtype=bf16 run is asserted to actually halve the bytes (an
+    fp32-sized gather then exceeds the ceiling and fails).
     """
     if strategy == "allgather":
+        def traffic(n_gathers, n_rs=0):
+            if state_bytes is None:
+                return {}
+            out = {}
+            if n_gathers:
+                out["all-gather"] = n_gathers * (world - 1) * state_bytes
+            if n_rs:
+                # RS input is the gathered size: (g-1) × result bytes
+                out["reduce-scatter"] = n_rs * (world - 1) * state_bytes
+            return out
+
         if not with_grad:
-            return CollectiveBudget({"all-gather": 1})
+            return CollectiveBudget({"all-gather": 1},
+                                    max_traffic=traffic(1))
         if backward == "faithful":
             return CollectiveBudget({"all-gather": 2},
+                                    max_traffic=traffic(2),
                                     note="paper Alg. 2+4: fwd + dM gathers")
         return CollectiveBudget({"all-gather": 1, "reduce-scatter": 1},
+                                max_traffic=traffic(1, 1),
                                 note="autodiff: RS is the gather transpose")
     if strategy in ("ring", "pipelined"):
+        # state_bytes ceilings describe the packed (M‖A) gather payload;
+        # the ring paths ship the unpacked M_t per hop, so only the count
+        # is pinned here.
         per_pass = n_slices * (world - 1)
         n = 2 * per_pass if with_grad else per_pass
         return CollectiveBudget({"collective-permute": n})
@@ -73,8 +113,24 @@ def ring_baseline_budget(world: int, *,
 
 
 def check_budget(hlo_text: str, budget: CollectiveBudget,
-                 total_devices: int) -> List[str]:
-    """Return human-readable violations (empty list = within budget)."""
+                 total_devices: int, records=None) -> List[str]:
+    """Return human-readable violations (empty list = within budget).
+
+    Counts always come from the compiled HLO. Traffic ceilings
+    (``budget.max_traffic``) come from the HLO too unless ``records`` (a
+    list of trace-time :class:`repro.comm.CommRecord`) is given — the
+    wire-dtype-true view. Pass the tape when asserting ``comm_dtype``
+    byte budgets on CPU: XLA-CPU's float-normalization pass upcasts bf16
+    collectives to f32 in compiled HLO (bf16 is storage-only there), so
+    only the tape shows the halving this backend cannot express; on TPU
+    bf16 collectives are native and the two views agree.
+
+    The tape only records collectives issued through the named
+    primitives — AD-emitted ones (e.g. the reduce-scatter transpose of
+    the forward gather) never reach it. A ceiling op the HLO count
+    expects but the tape lacks is therefore reported as a violation
+    rather than passing vacuously against 0 tape bytes.
+    """
     counts = collective_counts(hlo_text, total_devices)
     violations = []
     for op, expected in budget.counts.items():
@@ -89,19 +145,30 @@ def check_budget(hlo_text: str, budget: CollectiveBudget,
                                   f"{counts[op]}")
     if budget.max_traffic:
         by_op: Dict[str, float] = {}
-        for c in parse_collectives(hlo_text, total_devices):
-            by_op[c.op] = by_op.get(c.op, 0.0) + c.traffic_bytes
+        if records is not None:
+            for r in records:
+                by_op[r.op] = by_op.get(r.op, 0.0) + r.traffic_bytes
+        else:
+            for c in parse_collectives(hlo_text, total_devices):
+                by_op[c.op] = by_op.get(c.op, 0.0) + c.traffic_bytes
+        src = "tape" if records is not None else "compiled HLO"
         for op, ceiling in budget.max_traffic.items():
-            if by_op.get(op, 0.0) > ceiling:
+            if records is not None and op not in by_op \
+                    and budget.counts.get(op, 0):
                 violations.append(
-                    f"{op}: traffic {by_op.get(op, 0.0):.0f}B exceeds "
-                    f"budget {ceiling:.0f}B")
+                    f"{op}: expected on the wire but absent from the "
+                    f"CommRecord tape (AD-emitted?) — byte ceiling "
+                    f"unverifiable from records")
+            elif by_op.get(op, 0.0) > ceiling:
+                violations.append(
+                    f"{op}: {src} traffic {by_op.get(op, 0.0):.0f}B "
+                    f"exceeds budget {ceiling:.0f}B")
     return violations
 
 
 def assert_budget(hlo_text: str, budget: CollectiveBudget,
-                  total_devices: int) -> None:
-    violations = check_budget(hlo_text, budget, total_devices)
+                  total_devices: int, records=None) -> None:
+    violations = check_budget(hlo_text, budget, total_devices, records)
     if violations:
         note = f" ({budget.note})" if budget.note else ""
         raise AssertionError(

@@ -30,6 +30,60 @@ import jax.numpy as jnp
 
 _TAPE = threading.local()
 
+# Wire-dtype registry for the ``comm_dtype`` knob (docs/communication.md):
+# exchanges cast their payload to this dtype before the collective and
+# accumulate/combine in fp32 locally. "bf16" halves every state/KV
+# exchange's bytes (ZeCO's observation: comm *volume*, not just count,
+# limits SP scalability) at ~3 decimal digits of payload precision.
+_COMM_DTYPES = {
+    "fp32": jnp.float32, "float32": jnp.float32,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+}
+
+
+def wire_dtype(comm_dtype: Optional[str]):
+    """Resolve a ``comm_dtype`` knob value ("fp32" | "bf16") to a dtype."""
+    if comm_dtype is None:
+        return jnp.float32
+    try:
+        return _COMM_DTYPES[comm_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm_dtype {comm_dtype!r}; expected one of "
+            f"{tuple(_COMM_DTYPES)}") from None
+
+
+@jax.custom_vjp
+def _pin(x):
+    """Identity that XLA passes cannot look through (values unchanged)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _pin_fwd(x):
+    return _pin(x), None
+
+
+def _pin_bwd(_, ct):
+    return (ct,)
+
+
+_pin.defvjp(_pin_fwd, _pin_bwd)
+
+
+def upcast_gathered(x, dtype=jnp.float32):
+    """Upcast a gathered wire-dtype payload to the local accumulate dtype
+    *behind an optimization barrier*.
+
+    Without the barrier XLA's convert-mover commutes the upcast across
+    the adjacent collective ("convert processes 1/W the data before the
+    gather") — undoing the comm_dtype bf16 halving by putting the fp32
+    payload back on the wire (observed on XLA-CPU, whose cost model does
+    not price collective bytes). A no-op when no cast happened.
+    """
+    if x.dtype == jnp.dtype(dtype):
+        return x
+    return _pin(x).astype(dtype)
+
 
 @dataclass(frozen=True)
 class CommRecord:
@@ -158,7 +212,7 @@ def auto_slices(dv: int, preferred: int = 4) -> int:
 
 
 def _prefix_chain(m_slice, chunk_decay, axis: str, axis_size: int, t,
-                  tag: str):
+                  tag: str, wire=jnp.float32):
     """Unrolled W-1 step ring prefix-accumulation of one state slice.
 
     At step s, rank t receives the packet that originated at rank
@@ -168,11 +222,17 @@ def _prefix_chain(m_slice, chunk_decay, axis: str, axis_size: int, t,
     The loop is unrolled (W is a static mesh degree), which (a) lets the
     HLO budget checker count the 2(W-1) fwd+bwd permutes literally and
     (b) exposes every hop to XLA's latency-hiding scheduler.
+
+    ``wire``: each hop's payload dtype; accumulation stays fp32. Note a
+    bf16 wire re-rounds the packet at every hop (W-1 compounding casts) —
+    looser than the single cast of the allgather strategy.
     """
     m_prev = jnp.zeros_like(m_slice)
     packet = m_slice
     for s in range(axis_size - 1):
-        packet = ring_sendrecv(packet, axis, axis_size=axis_size, tag=tag)
+        packet = upcast_gathered(
+            ring_sendrecv(packet.astype(wire), axis, axis_size=axis_size,
+                          tag=tag), jnp.float32)
         m_prev = jnp.where(t - 1 - s >= 0, m_prev + packet, m_prev)
         packet = packet * chunk_decay
     return m_prev
@@ -180,6 +240,7 @@ def _prefix_chain(m_slice, chunk_decay, axis: str, axis_size: int, t,
 
 def pipelined_prefix_exchange(m_loc, log_decay, axis: str, *, axis_size: int,
                               t, n_slices: Optional[int] = None,
+                              comm_dtype: Optional[str] = None,
                               tag: str = "pipelined"):
     """ZeCO-style pipelined ring prefix-scan of the chunk states.
 
@@ -198,10 +259,13 @@ def pipelined_prefix_exchange(m_loc, log_decay, axis: str, *, axis_size: int,
     dv = m_loc.shape[-1]
     if n_slices is None:
         n_slices = auto_slices(dv)
+    wire = wire_dtype(comm_dtype)
     chunk_decay = jnp.exp(log_decay)[..., None, None]
     if n_slices == 1:
-        return _prefix_chain(m_loc, chunk_decay, axis, axis_size, t, tag)
+        return _prefix_chain(m_loc, chunk_decay, axis, axis_size, t, tag,
+                             wire=wire)
     slices = jnp.split(m_loc, n_slices, axis=-1)
     outs = [_prefix_chain(s_, chunk_decay, axis, axis_size, t,
-                          f"{tag}[{i}]") for i, s_ in enumerate(slices)]
+                          f"{tag}[{i}]", wire=wire)
+            for i, s_ in enumerate(slices)]
     return jnp.concatenate(outs, axis=-1)

@@ -68,6 +68,14 @@ class CommStrategy:
     name: str = "?"
     supports_faithful = False
 
+    def __init__(self, comm_dtype: Optional[str] = None):
+        # Wire dtype of the exchange payload (docs/communication.md):
+        # fp32 states are cast to this dtype for the collective and the
+        # prefix combine happens in fp32 locally — "bf16" halves the
+        # per-layer exchange bytes.
+        self.comm_dtype = comm_dtype
+        self.wire = primitives.wire_dtype(comm_dtype)
+
     def prefix(self, m_loc, a_loc, axis: str, axis_size: int, t,
                scheduler: DoubleBufferedScheduler,
                compute: Callable[[], object]) -> PrefixExchange:
@@ -82,13 +90,14 @@ class AllGatherStrategy(CommStrategy):
 
     def prefix(self, m_loc, a_loc, axis, axis_size, t, scheduler, compute):
         dk, dv = m_loc.shape[-2:]
-        packed = pack_state(m_loc, a_loc)
+        packed = pack_state(m_loc, a_loc).astype(self.wire)
         gathered, intra = scheduler.run(
             packed,
             lambda p: primitives.allgather_states(
                 p, axis, axis_size=axis_size, tag="lasp2.states"),
             compute)
-        ms, las = unpack_state(gathered, dk, dv)
+        ms, las = unpack_state(
+            primitives.upcast_gathered(gathered, jnp.float32), dk, dv)
         cum = jnp.cumsum(las, axis=0)
         return PrefixExchange(prefix_state_combine(ms, cum, t), intra,
                               cum, ms)
@@ -104,7 +113,7 @@ class RingStrategy(CommStrategy):
             m_loc,
             lambda m: primitives.pipelined_prefix_exchange(
                 m, a_loc, axis, axis_size=axis_size, t=t, n_slices=1,
-                tag="lasp2.ring"),
+                comm_dtype=self.comm_dtype, tag="lasp2.ring"),
             compute)
         return PrefixExchange(m_prev, intra, None, None)
 
@@ -116,7 +125,9 @@ class PipelinedStrategy(CommStrategy):
 
     name = "pipelined"
 
-    def __init__(self, n_slices: Optional[int] = None):
+    def __init__(self, n_slices: Optional[int] = None,
+                 comm_dtype: Optional[str] = None):
+        super().__init__(comm_dtype)
         self.n_slices = n_slices
 
     def prefix(self, m_loc, a_loc, axis, axis_size, t, scheduler, compute):
@@ -124,7 +135,8 @@ class PipelinedStrategy(CommStrategy):
             m_loc,
             lambda m: primitives.pipelined_prefix_exchange(
                 m, a_loc, axis, axis_size=axis_size, t=t,
-                n_slices=self.n_slices, tag="lasp2.pipelined"),
+                n_slices=self.n_slices, comm_dtype=self.comm_dtype,
+                tag="lasp2.pipelined"),
             compute)
         return PrefixExchange(m_prev, intra, None, None)
 
@@ -136,10 +148,12 @@ _STRATEGIES = {
 }
 
 
-def get_strategy(name: str) -> CommStrategy:
+def get_strategy(name: str,
+                 comm_dtype: Optional[str] = None) -> CommStrategy:
     try:
-        return _STRATEGIES[name]()
+        cls = _STRATEGIES[name]
     except KeyError:
         raise ValueError(
             f"unknown comm strategy {name!r}; expected one of "
             f"{tuple(_STRATEGIES)}") from None
+    return cls(comm_dtype=comm_dtype)

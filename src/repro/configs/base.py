@@ -263,6 +263,8 @@ class RunConfig:
     # SP communication subsystem (repro/comm, docs/communication.md):
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     comm_overlap: str = "overlap"      # overlap | none (A/B benchmarking)
+    comm_dtype: str = "fp32"           # fp32 | bf16 exchange payloads
+    #   (bf16 halves SP state/KV all-gather bytes; combines stay fp32)
     # 2D DP×SP training mesh (docs/parallelism.md): dp_degree × sp_degree
     # devices, batch over "data" × sequence over "sequence". 0 = unset
     # (launchers fall back to single-device or the legacy 1-D mesh).

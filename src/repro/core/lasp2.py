@@ -86,6 +86,7 @@ class SPConfig:
     sp_axis: str = "sequence"  # mesh axis the sequence dim is split over
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     overlap: str = "overlap"           # overlap | none
+    comm_dtype: str = "fp32"           # fp32 | bf16 exchange payloads
     kernel_backend: Optional[str] = None   # xla | pallas | interpret
     manual: bool = False     # caller already inside a manual region
 
@@ -114,7 +115,7 @@ def _intra_chunk(q, k, v, log_a, block_size, kernel_backend) -> ChunkOutputs:
 
 def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
                       strategy="allgather", overlap="overlap",
-                      kernel_backend=None):
+                      kernel_backend=None, comm_dtype="fp32"):
     """Runs on each device's sequence shard. Returns output + residual pack.
 
     Ordering mirrors paper Alg. 2: the cheap chunk-summary pass produces
@@ -133,7 +134,7 @@ def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
     # kernel by the scheduler. For "allgather" this is THE single
     # collective of LASP-2.
     t = jax.lax.axis_index(sp_axis)
-    ex = get_strategy(strategy).prefix(
+    ex = get_strategy(strategy, comm_dtype).prefix(
         m_loc, a_loc, sp_axis, axis_size, t,
         DoubleBufferedScheduler(overlap),
         lambda: _intra_chunk(q, k, v, log_a, bs, kernel_backend))
@@ -146,14 +147,16 @@ def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
     return o.astype(q.dtype), (ex.m_prev, ex.cum, t)
 
 
-def _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size):
+def _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size,
+                         comm_dtype="fp32"):
     """Paper Alg. 1: no mask — every position reads the full-sequence state."""
     del block_size
     kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
     m_loc = jnp.einsum("...sk,...sv->...kv", kf, vf)
     ms = comm_primitives.allgather_states(
-        m_loc, sp_axis, axis_size=axis_size, tag="lasp2.noncausal")
-    m_tot = jnp.sum(ms, axis=0)
+        m_loc.astype(comm_primitives.wire_dtype(comm_dtype)), sp_axis,
+        axis_size=axis_size, tag="lasp2.noncausal")
+    m_tot = jnp.sum(comm_primitives.upcast_gathered(ms), axis=0)
     o = jnp.einsum("...sk,...kv->...sv", q.astype(jnp.float32), m_tot)
     return o.astype(q.dtype), m_tot
 
@@ -162,24 +165,25 @@ def _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size):
 # Paper-faithful custom_vjp (Algorithms 3/4).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def _lasp2_causal_faithful(q, k, v, log_a, sp_axis, block_size, axis_size,
-                           overlap, kernel_backend):
+                           overlap, kernel_backend, comm_dtype):
     o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
-                             "allgather", overlap, kernel_backend)
+                             "allgather", overlap, kernel_backend,
+                             comm_dtype)
     return o
 
 
 def _faithful_fwd(q, k, v, log_a, sp_axis, block_size, axis_size, overlap,
-                  kernel_backend):
+                  kernel_backend, comm_dtype):
     o, (m_prev, cum, t) = _causal_fwd_local(
         q, k, v, log_a, sp_axis, block_size, axis_size, "allgather", overlap,
-        kernel_backend)
+        kernel_backend, comm_dtype)
     return o, (q, k, v, log_a, m_prev, cum, t)
 
 
 def _faithful_bwd(sp_axis, block_size, axis_size, overlap, kernel_backend,
-                  res, do):
+                  comm_dtype, res, do):
     q, k, v, log_a, m_prev, cum, t = res
     bs = pick_block(q.shape[-2], block_size)
     dof = do.astype(jnp.float32)
@@ -187,9 +191,11 @@ def _faithful_bwd(sp_axis, block_size, axis_size, overlap, kernel_backend,
     qb = q.astype(jnp.float32) * b[..., None]
     # Alg. 4 line 3: dM_t = (Q_t~)^T dO_t  (decay-weighted in our general form)
     dm_up = jnp.einsum("...sk,...sv->...kv", qb, dof)
-    # Alg. 4 line 4: the single backward AllGather.
-    dms = comm_primitives.allgather_states(
-        dm_up, sp_axis, axis_size=axis_size, tag="lasp2.dstates")
+    # Alg. 4 line 4: the single backward AllGather (comm_dtype on the
+    # wire; the suffix combine below stays fp32).
+    dms = comm_primitives.upcast_gathered(comm_primitives.allgather_states(
+        dm_up.astype(comm_primitives.wire_dtype(comm_dtype)), sp_axis,
+        axis_size=axis_size, tag="lasp2.dstates"))
     # Alg. 4 line 9: decayed suffix sum, local.
     dm_loc = suffix_grad_combine(dms, cum, t)
 
@@ -214,24 +220,28 @@ def _faithful_bwd(sp_axis, block_size, axis_size, overlap, kernel_backend,
 _lasp2_causal_faithful.defvjp(_faithful_fwd, _faithful_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _lasp2_noncausal_faithful(q, k, v, sp_axis, block_size, axis_size):
-    o, _ = _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _lasp2_noncausal_faithful(q, k, v, sp_axis, block_size, axis_size,
+                              comm_dtype):
+    o, _ = _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size,
+                                comm_dtype)
     return o
 
 
-def _nc_fwd(q, k, v, sp_axis, block_size, axis_size):
-    o, m_tot = _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size)
+def _nc_fwd(q, k, v, sp_axis, block_size, axis_size, comm_dtype):
+    o, m_tot = _noncausal_fwd_local(q, k, v, sp_axis, block_size, axis_size,
+                                    comm_dtype)
     return o, (q, k, v, m_tot)
 
 
-def _nc_bwd(sp_axis, block_size, axis_size, res, do):
+def _nc_bwd(sp_axis, block_size, axis_size, comm_dtype, res, do):
     q, k, v, m_tot = res
     dof = do.astype(jnp.float32)
     # Alg. 3: dM_t = Q_t^T dO_t; AllGather; combine.
     dm_up = jnp.einsum("...sk,...sv->...kv", q.astype(jnp.float32), dof)
-    dms = comm_primitives.allgather_states(
-        dm_up, sp_axis, axis_size=axis_size, tag="lasp2.nc.dstates")
+    dms = comm_primitives.upcast_gathered(comm_primitives.allgather_states(
+        dm_up.astype(comm_primitives.wire_dtype(comm_dtype)), sp_axis,
+        axis_size=axis_size, tag="lasp2.nc.dstates"))
     # NOTE: paper Alg. 3 line 5 writes Sum([dM]_{t+1}^T) — a suffix sum — but
     # in the unmasked form every chunk's state feeds every output, so the
     # correct cotangent sums over *all* chunks (verified against autodiff in
@@ -253,9 +263,10 @@ _lasp2_noncausal_faithful.defvjp(_nc_fwd, _nc_bwd)
 # ---------------------------------------------------------------------------
 
 def _lasp2_causal_autodiff(q, k, v, log_a, sp_axis, block_size, axis_size,
-                           strategy, overlap, kernel_backend):
+                           strategy, overlap, kernel_backend,
+                           comm_dtype="fp32"):
     o, _ = _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
-                             strategy, overlap, kernel_backend)
+                             strategy, overlap, kernel_backend, comm_dtype)
     return o
 
 
@@ -284,7 +295,7 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         bs = pick_block(q_.shape[-2], block_size)
         m_loc, a_loc = chunk_summaries(k_, v_, la_, block_size=bs)
         t = jax.lax.axis_index(axis)
-        ex = get_strategy("allgather").prefix(
+        ex = get_strategy("allgather", sp.comm_dtype).prefix(
             m_loc, a_loc, axis, w, t, DoubleBufferedScheduler(sp.overlap),
             lambda: _intra_chunk(q_, k_, v_, la_, bs, kernel_backend))
         b = _cumulative_decay(la_)
@@ -320,6 +331,7 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
           backward: str = "faithful",
           comm_strategy: Optional[str] = None,
           overlap: Optional[str] = None,
+          comm_dtype: Optional[str] = None,
           kernel_backend: Optional[str] = None):
     """Chunked linear attention with LASP-2 sequence parallelism.
 
@@ -341,6 +353,11 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
       overlap: "overlap" (double-buffered, default) or "none" (exchange
         barriered behind intra-chunk compute — the A/B baseline).
         ``None`` → ``sp.overlap``.
+      comm_dtype: wire dtype of the state exchange — "fp32" or "bf16"
+        (payload cast before the collective, prefix combine in fp32;
+        bf16 halves the per-layer exchange bytes). ``None`` →
+        ``sp.comm_dtype``. Collective *counts* are untouched — only the
+        bytes change (asserted by the dtype-aware budgets).
       kernel_backend: intra-chunk compute path — "xla" (``chunk_scan``),
         "pallas" (fused TPU kernel, trainable via its two-pass backward),
         "interpret" (Pallas interpret mode, for CPU tests).
@@ -368,7 +385,8 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
     strategy = comm_strategy if comm_strategy is not None \
         else sp.comm_strategy
     ovl = overlap if overlap is not None else sp.overlap
-    get_strategy(strategy)   # validate the name on every path
+    cdt = comm_dtype if comm_dtype is not None else sp.comm_dtype
+    get_strategy(strategy, cdt)   # validate both names on every path
     if strategy != "allgather" and backward == "faithful":
         backward = "autodiff"   # faithful == the paper's AllGather pattern
     if not causal and strategy != "allgather":
@@ -385,12 +403,13 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         if causal:
             if backward == "faithful":
                 return _lasp2_causal_faithful(q, k, v, log_a, axis,
-                                              block_size, w, ovl, kb)
+                                              block_size, w, ovl, kb, cdt)
             return _lasp2_causal_autodiff(q, k, v, log_a, axis, block_size,
-                                          w, strategy, ovl, kb)
+                                          w, strategy, ovl, kb, cdt)
         if backward == "faithful":
-            return _lasp2_noncausal_faithful(q, k, v, axis, block_size, w)
-        return _noncausal_fwd_local(q, k, v, axis, block_size, w)[0]
+            return _lasp2_noncausal_faithful(q, k, v, axis, block_size, w,
+                                             cdt)
+        return _noncausal_fwd_local(q, k, v, axis, block_size, w, cdt)[0]
 
     nd = q.ndim
     spec_qkv = P(*([None] * (nd - 2)), axis, None)
@@ -400,12 +419,12 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         if backward == "faithful":
             def mapped(q_, k_, v_, la_):
                 return _lasp2_causal_faithful(q_, k_, v_, la_, axis,
-                                              block_size, w, ovl, kb)
+                                              block_size, w, ovl, kb, cdt)
         else:
             def mapped(q_, k_, v_, la_):
                 return _lasp2_causal_autodiff(q_, k_, v_, la_, axis,
                                               block_size, w, strategy, ovl,
-                                              kb)
+                                              kb, cdt)
 
         return _shard_map(
             mapped, mesh=sp.mesh,
@@ -415,10 +434,12 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
 
     if backward == "faithful":
         def mapped_nc(q_, k_, v_):
-            return _lasp2_noncausal_faithful(q_, k_, v_, axis, block_size, w)
+            return _lasp2_noncausal_faithful(q_, k_, v_, axis, block_size,
+                                             w, cdt)
     else:
         def mapped_nc(q_, k_, v_):
-            o, _ = _noncausal_fwd_local(q_, k_, v_, axis, block_size, w)
+            o, _ = _noncausal_fwd_local(q_, k_, v_, axis, block_size, w,
+                                        cdt)
             return o
 
     return _shard_map(

@@ -26,8 +26,12 @@ from repro.core.compat import shard_map as _shard_map
 
 from repro.comm import primitives as comm_primitives
 from repro.core.lasp2 import SPConfig
+from repro.kernels.flash_attention import mask_value
 
-NEG_INF = -1e30
+# Masked-logit fill for fp32 score tensors, finfo-derived so a future
+# reduced-precision score path cannot overflow the way a -1e30 literal
+# does in fp16 (see repro.kernels.flash_attention.mask_value).
+NEG_INF = mask_value(jnp.float32)
 
 
 def _softmax_attend(q, k, v, *, bias=None, scale, mask=None):
@@ -79,28 +83,40 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
     may be sharded over ``sp.sp_axis``. One forward all-gather each for K and
     V (sizes C×d per chunk — small under GQA); backward (via autodiff) emits
     the mirrored reduce-scatter on dK/dV, matching Megatron's AG/RS pairing
-    shown in paper Fig. 2.
+    shown in paper Fig. 2. With ``sp.comm_dtype="bf16"`` the gathered
+    payload travels in bf16 and the local attention math stays fp32.
 
     ``kernel_backend`` (``None`` → ``sp.kernel_backend``, then the
-    platform default) applies to the degree-1 path, which dispatches
-    through ``repro.kernels.ops.flash_attention_op``. The sharded local
-    attention keeps the XLA mask path: its query offset ``t·C`` is a
-    traced per-rank scalar, which the flash kernel's static ``q_offset``
-    cannot express.
+    platform default) applies to degree-1 AND the sharded local
+    attention — both dispatch through
+    ``repro.kernels.ops.flash_attention_op``, whose Pallas kernels accept
+    the rank offset ``t·C`` as a traced ``q_offset``. Hybrid (LASP-2H)
+    training is therefore Pallas end-to-end on the Pallas backends.
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
     if kernel_backend is None and sp is not None:
         kernel_backend = sp.kernel_backend
 
+    from repro.kernels import ops as _ops
+
     if sp is None or sp.degree == 1:
-        from repro.kernels import ops as _ops
         return _ops.flash_attention_op(
             q, k, v, causal=causal, sliding_window=sliding_window,
             scale=scale, backend=kernel_backend)
 
     axis = sp.sp_axis
     w = sp.degree
+    wire = comm_primitives.wire_dtype(sp.comm_dtype)
+
+    def narrow(x):
+        # comm_dtype only ever NARROWS the wire payload: bf16 activations
+        # under the default comm_dtype="fp32" keep their native-dtype
+        # gather (widening them would double the bytes this knob exists
+        # to halve).
+        if jnp.dtype(wire).itemsize < x.dtype.itemsize:
+            return x.astype(wire)
+        return x
 
     def local_fn(q_, k_, v_):
         # q_: (B, Hq, C, dh); k_/v_: (B, Hkv, C, dh) local chunks.
@@ -108,24 +124,20 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
         t = jax.lax.axis_index(axis)
         # Alg. 7 line 5: gather K/V chunks; tiled=True concatenates along a
         # new leading dim which we fold into the sequence dim (line 6).
-        kg = comm_primitives.allgather_states(
-            k_, axis, axis_size=w, gather_axis=2, tiled=True,
-            tag="lasp2h.k")                                    # (B,Hkv,S,dh)
-        vg = comm_primitives.allgather_states(
-            v_, axis, axis_size=w, gather_axis=2, tiled=True,
-            tag="lasp2h.v")
-        mask = None
-        if causal:
-            mask = causal_mask(c, w * c, t * c,
-                               sliding_window=sliding_window)[None, None]
-        elif sliding_window is not None:
-            # Non-causal + window: one-sided window bound only — the same
-            # semantics as the degree-1 flash_attention_op path, so output
-            # is invariant to the SP degree.
-            qpos = t * c + jnp.arange(c)[:, None]
-            kpos = jnp.arange(w * c)[None, :]
-            mask = ((qpos - kpos) < sliding_window)[None, None]
-        return _softmax_attend(q_, kg, vg, scale=scale, mask=mask)
+        # comm_dtype on the wire; attention math is fp32 locally either way.
+        kg = comm_primitives.upcast_gathered(
+            comm_primitives.allgather_states(
+                narrow(k_), axis, axis_size=w, gather_axis=2,
+                tiled=True, tag="lasp2h.k"), k_.dtype)     # (B,Hkv,S,dh)
+        vg = comm_primitives.upcast_gathered(
+            comm_primitives.allgather_states(
+                narrow(v_), axis, axis_size=w, gather_axis=2,
+                tiled=True, tag="lasp2h.v"), v_.dtype)
+        # Local attention for this rank's Q chunk (Alg. 7 line 7): the
+        # flash kernel masks with the traced rank offset t·C.
+        return _ops.flash_attention_op(
+            q_, kg, vg, causal=causal, sliding_window=sliding_window,
+            scale=scale, q_offset=t * c, backend=kernel_backend)
 
     if sp.manual:
         # Already inside the 2D train step's fully-manual shard_map:

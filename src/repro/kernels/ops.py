@@ -117,25 +117,42 @@ def linear_decode_op(q, k, v, log_a, state, log_decay, *,
 
 def flash_attention_op(q, k, v, *, causal: bool = True, sliding_window=None,
                        scale=None, backend: Optional[str] = None,
-                       block_q: int = 128, block_k: int = 128):
-    """GQA softmax attention. q: (B,Hq,S,dh); k/v: (B,Hkv,Sk,dh).
+                       block_q: int = 128, block_k: int = 128,
+                       q_offset=None):
+    """GQA softmax attention (differentiable). q: (B,Hq,S,dh); k/v:
+    (B,Hkv,Sk,dh).
 
     For ``sq != sk`` (prefill-with-cache / ring-decode shapes) queries sit
     at global positions ``(sk - sq) + i`` — the same ``q_offset``
-    convention on the Pallas kernel and the XLA mask fallback.
+    convention on the Pallas kernel and the XLA mask fallback. Callers
+    with a different origin (the LASP-2H rank offset ``t·C``) pass
+    ``q_offset`` explicitly; a traced scalar is accepted.
+
+    Awkward (non-block-multiple) ``sq``/``sk`` are right-padded to block
+    multiples — mask-safe: padded keys are masked out via the kernel's
+    ``kv_len`` and padded query rows are sliced off (their cotangents are
+    zeroed by the pad/slice transpose) — so the Pallas path runs on odd
+    prompt lengths instead of silently dropping to XLA.
     """
     backend = resolve_backend(backend)
     if _compat.is_tracer(sliding_window):
         backend = "xla"   # dynamic window (hymba stacked layers) → XLA path
     sq, sk = q.shape[2], k.shape[2]
-    q_offset = sk - sq
+    if q_offset is None:
+        q_offset = sk - sq
     if backend in ("pallas", "interpret"):
-        if sq % min(block_q, sq) == 0 and sk % min(block_k, sk) == 0:
-            return _flash.flash_attention(
-                q, k, v, causal=causal, sliding_window=sliding_window,
-                scale=scale, q_offset=q_offset, block_q=block_q,
-                block_k=block_k, interpret=(backend == "interpret"))
-        # fall through for awkward shapes
+        bq, bk = min(block_q, sq), min(block_k, sk)
+        pad_q, pad_k = -sq % bq, -sk % bk
+        if pad_q:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        if pad_k:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        o = _flash.flash_attention(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            scale=scale, q_offset=q_offset, kv_len=sk, block_q=bq,
+            block_k=bk, interpret=(backend == "interpret"))
+        return o[..., :sq, :] if pad_q else o
     # Imported lazily: lasp2h imports core.lasp2 (SPConfig), which in turn
     # dispatches its intra-chunk compute through this module — a top-level
     # import here would close that cycle.

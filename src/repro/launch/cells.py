@@ -151,7 +151,8 @@ def build_cell(arch: str, shape_name: str, mesh: Optional[Mesh], *,
                      n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
                      params_bytes=cfg.param_count() * 2, backend=backend,
                      comm_strategy=run.comm_strategy,
-                     comm_overlap=run.comm_overlap)
+                     comm_overlap=run.comm_overlap,
+                     comm_dtype=run.comm_dtype)
     plan.banded_windows = run.banded_windows
 
     if shape.kind == "train":

@@ -52,6 +52,11 @@ def main():
     ap.add_argument("--comm-overlap", default="overlap",
                     choices=["overlap", "none"],
                     help="comm/compute overlap mode (A/B benchmarking)")
+    ap.add_argument("--comm-dtype", default="fp32",
+                    choices=["fp32", "bf16"],
+                    help="wire dtype of the SP state/KV exchanges (bf16 "
+                         "halves per-layer collective bytes; combines "
+                         "stay fp32 — docs/communication.md)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=["xla", "pallas", "interpret"],
                     help="intra-chunk/attention kernel path "
@@ -81,6 +86,7 @@ def main():
                     grad_compression=args.grad_compression,
                     comm_strategy=args.comm_strategy,
                     comm_overlap=args.comm_overlap,
+                    comm_dtype=args.comm_dtype,
                     kernel_backend=args.kernel_backend,
                     zero1=not args.no_zero1,
                     dp_degree=args.dp_degree, sp_degree=args.sp_degree)
@@ -105,7 +111,8 @@ def main():
                          n_kv_heads=cfg.n_kv_heads,
                          backend=run.kernel_backend,
                          comm_strategy=run.comm_strategy,
-                         comm_overlap=run.comm_overlap, zero1=run.zero1)
+                         comm_overlap=run.comm_overlap,
+                         comm_dtype=run.comm_dtype, zero1=run.zero1)
     elif args.multi_device and len(jax.devices()) > 1:
         from repro.launch.mesh import auto_axis_types
         mesh = jax.make_mesh((len(jax.devices()),), ("data",),
@@ -114,7 +121,8 @@ def main():
                          n_kv_heads=cfg.n_kv_heads,
                          backend=run.kernel_backend,
                          comm_strategy=run.comm_strategy,
-                         comm_overlap=run.comm_overlap)
+                         comm_overlap=run.comm_overlap,
+                         comm_dtype=run.comm_dtype)
     state, history = train(cfg, run, data, plan=plan,
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)

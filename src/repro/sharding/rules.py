@@ -202,13 +202,16 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
               backend: Optional[str] = None,
               comm_strategy: str = "allgather",
               comm_overlap: str = "overlap",
+              comm_dtype: str = "fp32",
               zero1: bool = True) -> Parallelism:
     """Resolve the activation rules for a cell.
 
-    ``comm_strategy`` / ``comm_overlap`` select the SP state-exchange
-    strategy and the comm/compute overlap mode for every LASP-2 layer run
-    under the plan (``repro/comm``; threaded from
-    ``RunConfig.comm_strategy`` by the launchers).
+    ``comm_strategy`` / ``comm_overlap`` / ``comm_dtype`` select the SP
+    state-exchange strategy, the comm/compute overlap mode, and the wire
+    dtype (fp32 | bf16 payloads, fp32 combines) for every LASP-2/2H
+    layer run under the plan (``repro/comm``; threaded from
+    ``RunConfig.comm_strategy``/``comm_overlap``/``comm_dtype`` by the
+    launchers).
 
     ``backend`` is the kernel backend (``xla | pallas | interpret``,
     ``None`` = platform default) — it becomes both ``plan.backend`` (the
@@ -253,7 +256,8 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
                    "vocab": None, "experts": None, "cache_seq": None})
         plan.sp = SPConfig(mesh=mesh, sp_axis=seq_ax, manual=True,
                            comm_strategy=comm_strategy,
-                           overlap=comm_overlap, kernel_backend=backend)
+                           overlap=comm_overlap, comm_dtype=comm_dtype,
+                           kernel_backend=backend)
         if zero1 and dp_ax is not None and mesh.shape[dp_ax] > 1:
             plan.zero1_axis = dp_ax
         return plan
@@ -286,6 +290,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
                                overlap=comm_overlap,
+                               comm_dtype=comm_dtype,
                                kernel_backend=backend)
         return plan
 
@@ -304,6 +309,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
                                overlap=comm_overlap,
+                               comm_dtype=comm_dtype,
                                kernel_backend=backend)
     elif shape_kind == "prefill":
         plan.rules = {"batch": "pod" if has_pod else None, "seq": sp_ax,
@@ -314,6 +320,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
                                overlap=comm_overlap,
+                               comm_dtype=comm_dtype,
                                kernel_backend=backend)
     elif shape_kind == "decode":
         cache_axis = tp if (tp and n_kv_heads % tp_size != 0) else None

@@ -203,6 +203,82 @@ def _():
     assert s["total_bytes"] == (W - 1) * (B * H * S * dk * 4) // W
 
 
+# --- comm_dtype (bf16 wire) ------------------------------------------------
+
+@check("comm_dtype=bf16: counts unchanged, bytes halved, budget-asserted")
+def _():
+    from repro.comm.budget import packed_state_bytes
+    sp_bf = SPConfig(mesh=mesh, sp_axis=SEQ_AXIS, comm_dtype="bf16")
+    sb16 = packed_state_bytes(B, H, dk, dv, "bf16")
+    assert sb16 * 2 == packed_state_bytes(B, H, dk, dv, "fp32")
+
+    # forward: still EXACTLY 1 all-gather; tape bytes = (W-1) × bf16 payload
+    # (the byte ceiling is checked against the trace-time tape: XLA-CPU's
+    # float-normalization upcasts bf16 collectives in compiled HLO — on
+    # TPU the HLO itself carries bf16 and the two views agree)
+    with tape() as recs:
+        txt = compiled_hlo(lambda a, b, c, d: lasp2(a, b, c, d, sp=sp_bf),
+                           q, k, v, log_a)
+    assert_budget(txt, lasp2_budget("allgather", W, state_bytes=sb16), W,
+                  records=recs)
+    s = tape_summary(recs)
+    assert s["all-gather_count"] == 1 and s["total_steps"] == 1
+    assert s["total_bytes"] == (W - 1) * sb16
+
+    # an fp32-sized gather must FAIL the bf16 ceiling (halving asserted,
+    # not assumed)
+    with tape() as recs32:
+        compiled_hlo(lambda a, b, c, d: lasp2(a, b, c, d, sp=sp), q, k, v,
+                     log_a)
+    try:
+        assert_budget(txt, lasp2_budget("allgather", W, state_bytes=sb16),
+                      W, records=recs32)
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError("fp32-sized tape passed the bf16 byte budget")
+
+    # autodiff backward: 1 gather + 1 reduce-scatter, both counts pinned
+    txt = compiled_hlo(jax.grad(
+        lambda a, b, c, d: jnp.sum(jnp.sin(lasp2(
+            a, b, c, d, sp=sp_bf, backward="autodiff"))),
+        argnums=(0, 1, 2, 3)), q, k, v, log_a)
+    assert_budget(txt, lasp2_budget("allgather", W, with_grad=True,
+                                    backward="autodiff"), W)
+
+    # parity within bf16 payload tolerance, both backwards
+    for backward in ("faithful", "autodiff"):
+        o = jax.jit(lambda a, b, c, d, bw=backward: lasp2(
+            a, b, c, d, sp=sp_bf, backward=bw))(q, k, v, log_a)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref.o),
+                                   rtol=3e-2, atol=3e-2,
+                                   err_msg=f"bf16/{backward}")
+
+    # ring/pipelined wires also halve (per-hop casts; fp32 accumulate)
+    for strategy in ("ring", "pipelined"):
+        with tape() as recs:
+            compiled_hlo(lambda a, b, c, d, s_=strategy: lasp2(
+                a, b, c, d, sp=sp_bf, comm_strategy=s_,
+                backward="autodiff"), q, k, v, log_a)
+        sm = tape_summary(recs)
+        assert sm["total_bytes"] == (W - 1) * B * H * dk * dv * 2, strategy
+
+
+@check("invalid comm_dtype raises on every entry point")
+def _():
+    for fn in (lambda: lasp2(q, k, v, log_a, sp=sp, comm_dtype="fp64"),
+               lambda: SPConfig(mesh=mesh, sp_axis=SEQ_AXIS,
+                                comm_dtype="int8") and lasp2(
+                   q, k, v, log_a,
+                   sp=SPConfig(mesh=mesh, sp_axis=SEQ_AXIS,
+                               comm_dtype="int8"))):
+        try:
+            fn()
+        except ValueError:
+            continue
+        raise AssertionError("bad comm_dtype should have raised")
+
+
 # --- CommRecord tape vs HLO cross-validation -------------------------------
 
 @check("CommRecord tape agrees with the HLO on count/steps/bytes")

@@ -222,6 +222,81 @@ def _():
     np.testing.assert_allclose(g1, g0, rtol=1e-3, atol=1e-3)
 
 
+@check("LASP-2H trains through the flash kernel (interpret) in shard_map")
+def _():
+    """The sharded hybrid path dispatches through ops.flash_attention_op:
+    the Pallas flash custom_vjp runs INSIDE the SP shard_map with the
+    rank offset t·C as a traced q_offset — forward parity, grads, and
+    the unchanged 2-gather (K, V) collective budget."""
+    import re
+    spk = SPConfig(mesh=mesh1d, sp_axis=SEQ_AXIS,
+                   kernel_backend="interpret")
+    for window in (None, 64):
+        ref = allgather_context_attention(qs, ks_, vs, sp=None,
+                                          sliding_window=window)
+        o = jax.jit(lambda a, b, c, w=window: allgather_context_attention(
+            a, b, c, sp=spk, sliding_window=w))(qs, ks_, vs)
+        np.testing.assert_allclose(o, ref, rtol=2e-4, atol=2e-4)
+    g1 = jax.jit(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+        allgather_context_attention(a, b, c, sp=spk))),
+        argnums=(0, 1, 2)))(qs, ks_, vs)
+    g0 = jax.jit(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+        allgather_context_attention(a, b, c, sp=None))),
+        argnums=(0, 1, 2)))(qs, ks_, vs)
+    for a_, b_ in zip(g1, g0):
+        np.testing.assert_allclose(a_, b_, rtol=1e-3, atol=1e-3)
+    txt = jax.jit(lambda a, b, c: allgather_context_attention(
+        a, b, c, sp=spk)).lower(qs, ks_, vs).compile().as_text()
+    n_ag = len(re.findall(r"all-gather\(", txt))
+    assert n_ag == 2, f"expected the K and V gathers only, got {n_ag}"
+
+
+@check("comm_dtype=bf16: same collectives, half the bytes, output parity")
+def _():
+    """The bf16 wire knob: collective *counts* are unchanged (1 packed
+    state gather for LASP-2; K+V gathers for LASP-2H) while the
+    CommRecord bytes halve — asserted via the dtype-aware budget — and
+    outputs stay within bf16 payload tolerance of the fp32 exchange."""
+    from repro.comm import tape, tape_summary
+    from repro.comm.budget import (assert_budget, lasp2_budget,
+                                   packed_state_bytes)
+    sp_bf = SPConfig(mesh=mesh1d, sp_axis=SEQ_AXIS, comm_dtype="bf16")
+    ref = la.sequential_oracle(q, k, v, log_a)
+    o = jax.jit(lambda a, b, c, d: lasp2(a, b, c, d, sp=sp_bf))(
+        q, k, v, log_a)
+    np.testing.assert_allclose(o, ref.o, rtol=3e-2, atol=3e-2)
+    with tape() as recs:
+        txt = jax.jit(lambda a, b, c, d: lasp2(
+            a, b, c, d, sp=sp_bf)).lower(q, k, v, log_a).compile().as_text()
+    sb = packed_state_bytes(B, H, dk, dv, "bf16")
+    assert sb == packed_state_bytes(B, H, dk, dv, "fp32") // 2
+    # count from compiled HLO; byte ceiling from the dtype-true tape
+    # (XLA-CPU float-normalization upcasts bf16 collectives in HLO)
+    assert_budget(txt, lasp2_budget("allgather", 8, state_bytes=sb), 8,
+                  records=recs)
+    assert tape_summary(recs)["total_bytes"] == 7 * sb
+    # LASP-2H K/V gathers in bf16: half the KV bytes, parity holds
+    sph = SPConfig(mesh=mesh1d, sp_axis=SEQ_AXIS, comm_dtype="bf16")
+    refh = allgather_context_attention(qs, ks_, vs, sp=None)
+    with tape() as recs:
+        oh = jax.jit(lambda a, b, c: allgather_context_attention(
+            a, b, c, sp=sph))(qs, ks_, vs)
+    np.testing.assert_allclose(oh, refh, rtol=2e-2, atol=2e-2)
+    s = tape_summary(recs)
+    kv_payload = B * Hkv * (S // 8) * dh * 2
+    assert s["all-gather_count"] == 2
+    assert s["total_bytes"] == 2 * 7 * kv_payload
+    # the knob only ever NARROWS: bf16 activations under the default
+    # comm_dtype="fp32" keep their native bf16-sized K/V gather
+    # (widening would double the bytes the knob exists to halve)
+    sp32 = SPConfig(mesh=mesh1d, sp_axis=SEQ_AXIS)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (qs, ks_, vs))
+    with tape() as recs:
+        jax.jit(lambda a, b, c: allgather_context_attention(
+            a, b, c, sp=sp32)).lower(qb, kb, vb)
+    assert tape_summary(recs)["total_bytes"] == 2 * 7 * kv_payload
+
+
 @check("Ring Attention == Megatron-SP == full attention")
 def _():
     ref = allgather_context_attention(qs, ks_, vs, sp=None)
@@ -342,6 +417,52 @@ def _():
     assert cost_analysis(compiled).get("flops", 0) > 0
 
 
+@check("hybrid (LASP-2H) train step == flash custom_vjp == xla backend")
+def _():
+    """Model-level proof of the Pallas hybrid hot path: a 2-layer
+    linear+softmax hybrid trains on a (1, 8) SP mesh with
+    kernel_backend="interpret" — every softmax layer runs the flash
+    custom_vjp inside the manual train-step shard_map with the traced
+    rank offset — and its 2-step losses match the xla backend and the
+    single-device oracle."""
+    from repro.configs.base import (LayerSpec, LinearAttnConfig,
+                                    ModelConfig, RunConfig)
+    from repro.data.pipeline import SyntheticLM
+    from repro.sharding.rules import local_plan, make_plan
+    from repro.train.step import init_state, make_train_step
+
+    cfg = ModelConfig(
+        name="hybrid-smoke", family="hybrid", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=160, vocab_size=512,
+        pattern=(LayerSpec(mixer="linear"), LayerSpec(mixer="softmax")),
+        linear_attn=LinearAttnConfig(feature_map="identity", decay="none"))
+    run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
+                    warmup_steps=2, learning_rate=1e-3)
+    data = SyntheticLM(cfg.vocab_size, 64, 8, seed=5)
+
+    def losses(backend, sharded):
+        if sharded:
+            plan = make_plan(make_training_mesh(1, 8), "train",
+                             global_batch=8, n_kv_heads=cfg.n_kv_heads,
+                             backend=backend)
+        else:
+            plan = local_plan(backend)
+        state = init_state(jax.random.PRNGKey(0), cfg, run, plan)
+        step = jax.jit(make_train_step(cfg, run, plan))
+        out = []
+        for i in range(2):
+            state, m = step(state, data.microbatched(i, 1))
+            out.append(float(m["loss"]))
+        return out
+
+    l_int = losses("interpret", sharded=True)
+    l_xla = losses("xla", sharded=True)
+    l_ref = losses(None, sharded=False)
+    assert all(np.isfinite(l_int)), l_int
+    np.testing.assert_allclose(l_int, l_xla, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(l_int, l_ref, rtol=2e-3, atol=2e-3)
+
+
 # --- 2D DP×SP training (data × sequence mesh, docs/parallelism.md) ----------
 
 from repro.configs import get_smoke                          # noqa: E402
@@ -355,7 +476,7 @@ _cfg2d = get_smoke("linear-llama3-1b")
 _data2d = SyntheticLM(_cfg2d.vocab_size, 64, 8, seed=3)
 
 
-def _run_steps(dp, sp_deg, run, n_steps=3, zero1=True):
+def _run_steps(dp, sp_deg, run, n_steps=3, zero1=True, comm_dtype="fp32"):
     """Train ``n_steps`` on a (dp, sp) mesh; (1, 1) = single device."""
     if (dp, sp_deg) == (1, 1):
         plan = local_plan()
@@ -363,7 +484,8 @@ def _run_steps(dp, sp_deg, run, n_steps=3, zero1=True):
     else:
         mesh = make_training_mesh(dp, sp_deg)
         plan = make_plan(mesh, "train", global_batch=8,
-                         n_kv_heads=_cfg2d.n_kv_heads, zero1=zero1)
+                         n_kv_heads=_cfg2d.n_kv_heads, zero1=zero1,
+                         comm_dtype=comm_dtype)
     state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
     step = jax.jit(make_train_step(_cfg2d, run, plan))
     losses = []
@@ -387,6 +509,20 @@ def _():
     # same global batch, same math — only the reduction grouping differs
     np.testing.assert_allclose(l_2d, l_sp, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(l_2d, l_ref, rtol=2e-3, atol=2e-3)
+
+
+@check(f"--comm-dtype bf16 loss trajectory ~= fp32 on ({DP},{SP})", section="2d")
+def _():
+    """Training with bf16 exchange payloads tracks the fp32-wire loss:
+    the wire dtype only rounds the state gathers (combines stay fp32),
+    so a 3-step trajectory stays within bf16 payload tolerance — the
+    sanity check behind shipping --comm-dtype bf16 as a perf knob."""
+    _, l_fp32 = _run_steps(DP, SP, _RUN2D)
+    _, l_bf16 = _run_steps(DP, SP, _RUN2D, comm_dtype="bf16")
+    np.testing.assert_allclose(l_bf16, l_fp32, rtol=2e-2, atol=2e-2)
+    if SP == 1:
+        # no sequence sharding → no SP exchange → bit-identical
+        np.testing.assert_allclose(l_bf16, l_fp32, rtol=0, atol=0)
 
 
 @check(f"ZeRO-1 sharded AdamW == replicated AdamW on ({DP},{SP})", section="2d")

@@ -311,5 +311,155 @@ def test_kernel_vmem_footprint_static():
     bq, bk, dh, dkv = 128, 128, 128, 128
     flash_tiles = (bq * dh + 2 * bk * dh + bq * dh) * 4 + bq * dh * 4
     chunk_tiles = (2 * 128 * dkv + 2 * 128 * dkv) * 4 + dkv * dkv * 4
+    # flash bwd dkv pass: q/k/v/do tiles + lse/delta rows + 2 accumulators
+    flash_bwd_tiles = (2 * bq * dh + 2 * bk * dh + 2 * bq) * 4 \
+        + 2 * bk * dh * 4
     assert flash_tiles < 16 * 2 ** 20
     assert chunk_tiles < 16 * 2 ** 20
+    assert flash_bwd_tiles < 16 * 2 ** 20
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention gradients: the custom_vjp two-pass backward kernels.
+# ---------------------------------------------------------------------------
+
+def _flash_case(rng, sq, sk, hq, hkv, dh, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    b = 2
+    q = (jax.random.normal(ks[0], (b, hq, sq, dh)) * 0.4).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, hkv, sk, dh)) * 0.4).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, hkv, sk, dh)) * 0.5).astype(dtype)
+    co = jax.random.normal(ks[3], (b, hq, sq, dh))
+    return q, k, v, co
+
+
+def _flash_loss(backend, co, causal, window, **kw):
+    def loss(q, k, v):
+        o = ops.flash_attention_op(q, k, v, causal=causal,
+                                   sliding_window=window, backend=backend,
+                                   **kw)
+        return jnp.sum(o.astype(jnp.float32) * co)
+    return loss
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_grads_match_xla_autodiff(rng, hq, hkv, causal, window):
+    """jax.grad through the flash custom_vjp (interpret) == XLA autodiff
+    of the masked-softmax fallback, across GQA ratios and windows."""
+    q, k, v, co = _flash_case(rng, 256, 256, hq, hkv, 64)
+    kw = dict(block_q=64, block_k=64)
+    g_int = jax.grad(_flash_loss("interpret", co, causal, window, **kw),
+                     argnums=(0, 1, 2))(q, k, v)
+    g_xla = jax.grad(_flash_loss("xla", co, causal, window),
+                     argnums=(0, 1, 2))(q, k, v)
+    for name, gi, gx in zip("q k v".split(), g_int, g_xla):
+        np.testing.assert_allclose(gi, gx, rtol=GRAD_TOL, atol=GRAD_TOL,
+                                   err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("sq,sk,window", [(128, 256, None), (64, 256, 96),
+                                          (128, 512, None)])
+def test_flash_grads_offset_shapes(rng, sq, sk, window):
+    """sq != sk (prefill-with-cache q_offset = sk - sq) backward parity."""
+    q, k, v, co = _flash_case(rng, sq, sk, 4, 2, 64)
+    kw = dict(block_q=64, block_k=64)
+    g_int = jax.grad(_flash_loss("interpret", co, True, window, **kw),
+                     argnums=(0, 1, 2))(q, k, v)
+    g_xla = jax.grad(_flash_loss("xla", co, True, window),
+                     argnums=(0, 1, 2))(q, k, v)
+    for name, gi, gx in zip("q k v".split(), g_int, g_xla):
+        np.testing.assert_allclose(gi, gx, rtol=GRAD_TOL, atol=GRAD_TOL,
+                                   err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("sq,sk", [(100, 100), (129, 257), (251, 251)])
+def test_flash_grads_awkward_lengths(rng, sq, sk):
+    """Odd (non-block-multiple) lengths run the Pallas path via the
+    mask-safe pad+slice in ops.flash_attention_op — forward AND backward
+    (padded-key grads masked to zero, padded-query cotangents sliced)."""
+    q, k, v, co = _flash_case(rng, sq, sk, 4, 2, 32)
+    kw = dict(block_q=64, block_k=64)
+    o_int = ops.flash_attention_op(q, k, v, backend="interpret", **kw)
+    o_xla = ops.flash_attention_op(q, k, v, backend="xla")
+    assert o_int.shape[-2] == sq
+    np.testing.assert_allclose(o_int, o_xla, rtol=3e-4, atol=3e-4)
+    g_int = jax.grad(_flash_loss("interpret", co, True, None, **kw),
+                     argnums=(0, 1, 2))(q, k, v)
+    g_xla = jax.grad(_flash_loss("xla", co, True, None),
+                     argnums=(0, 1, 2))(q, k, v)
+    for name, gi, gx in zip("q k v".split(), g_int, g_xla):
+        np.testing.assert_allclose(gi, gx, rtol=GRAD_TOL, atol=GRAD_TOL,
+                                   err_msg=f"d{name}")
+
+
+def test_flash_grads_traced_q_offset(rng):
+    """The LASP-2H sharded path passes the rank offset t·C as a traced
+    scalar: the kernel masks at runtime (band untrimmed) and the
+    custom_vjp returns a float0 cotangent for it."""
+    q, k, v, co = _flash_case(rng, 64, 256, 4, 2, 32)
+    for off in (0, 64, 192):
+        gi = jax.jit(jax.grad(
+            lambda a, b, c, o_: jnp.sum(ops.flash_attention_op(
+                a, b, c, causal=True, backend="interpret", block_q=64,
+                block_k=64, q_offset=o_) * co), argnums=(0, 1, 2)))(
+                    q, k, v, jnp.int32(off))
+        gx = jax.grad(
+            lambda a, b, c: jnp.sum(ops.flash_attention_op(
+                a, b, c, causal=True, backend="xla", q_offset=off) * co),
+            argnums=(0, 1, 2))(q, k, v)
+        for name, a_, b_ in zip("q k v".split(), gi, gx):
+            np.testing.assert_allclose(a_, b_, rtol=GRAD_TOL, atol=GRAD_TOL,
+                                       err_msg=f"d{name} @offset {off}")
+
+
+def test_flash_grads_bf16_inputs(rng):
+    """bf16 q/k/v: cotangents flow back in bf16 with fp32 kernel math."""
+    q, k, v, co = _flash_case(rng, 128, 128, 4, 2, 64, dtype=jnp.bfloat16)
+    kw = dict(block_q=64, block_k=64)
+    g_int = jax.grad(_flash_loss("interpret", co, True, None, **kw),
+                     argnums=(0, 1, 2))(q, k, v)
+    g_xla = jax.grad(_flash_loss("xla", co, True, None),
+                     argnums=(0, 1, 2))(q, k, v)
+    for gi, gx in zip(g_int, g_xla):
+        assert gi.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(gi, np.float32),
+                                   np.asarray(gx, np.float32),
+                                   rtol=4e-2, atol=4e-2)
+
+
+def test_flash_mask_value_dtype_aware():
+    """The masked-logit fill is finfo-derived (no -1e30 literal): finite
+    in every float dtype, including fp16 where -1e30 overflows."""
+    from repro.kernels.flash_attention import mask_value
+    for dt in (jnp.float32, jnp.bfloat16, jnp.float16):
+        mv = mask_value(dt)
+        assert np.isfinite(np.asarray(mv, dt)), dt
+        assert mv < -1e4
+    with np.errstate(over="ignore"):
+        assert not np.isfinite(np.float16(-1e30))   # the literal it replaces
+
+
+def test_flash_causal_band_static_trim():
+    """Causal grid trimming: the kv band never schedules blocks strictly
+    above the diagonal — with a sliding window the band is narrower than
+    the kv axis; fully-padded kv blocks are excluded via kv_len."""
+    from repro.kernels.flash_attention import _kv_band, _q_band
+    # causal, no window, q_offset=0: widest extent = full prefix
+    lo, hi, w = _kv_band(nq=4, nkv_real=4, block_q=64, block_k=64,
+                         q_offset=0, causal=True, sliding_window=None)
+    assert w == 4 and int(hi(0)) == 0 and int(hi(3)) == 3
+    # sliding window 64: each q block needs <= 2 kv blocks — real trim
+    lo, hi, w = _kv_band(nq=8, nkv_real=8, block_q=64, block_k=64,
+                         q_offset=0, causal=True, sliding_window=64)
+    assert w == 2
+    assert int(lo(4)) == 3 and int(hi(4)) == 4
+    # right-padded keys (kv_len < sk): padded blocks never scheduled
+    lo, hi, w = _kv_band(nq=2, nkv_real=2, block_q=64, block_k=64,
+                         q_offset=0, causal=False, sliding_window=None)
+    assert w == 2
+    # transposed (dk/dv) band under a window is likewise narrow
+    lo, hi, w = _q_band(nq=8, nkv=8, block_q=64, block_k=64, q_offset=0,
+                        causal=True, sliding_window=64)
+    assert w == 2
