@@ -20,7 +20,8 @@ dependency chain is what stretches LASP-1.
 
 from __future__ import annotations
 
-from benchmarks.common import emit, run_subprocess_bench, write_bench_json
+from benchmarks.common import (emit, run_subprocess_bench, telemetry_block,
+                               write_bench_json)
 
 BENCH_NAME = "comm"
 
@@ -33,7 +34,7 @@ from repro.comm import tape, tape_summary
 from repro.comm.budget import (assert_budget, lasp2_budget,
                                packed_state_bytes, ring_baseline_budget)
 from repro.comm.primitives import auto_slices
-from repro.launch.hlo_analysis import collective_counts
+from repro.launch.hlo_analysis import collective_counts, parse_collectives
 from repro.launch.mesh import SEQ_AXIS, make_sp_mesh
 
 W = 8
@@ -102,6 +103,10 @@ for S in (8192, 32768):
             "wall": bench(jf, (q, k, v)),
             "comm": tape_summary(recs),
             "hlo_collectives": collective_counts(hlo, W),
+            # measured (ring-model) bytes of the compiled HLO, next to
+            # the tape's expected bytes in "comm" (observability)
+            "hlo_bytes": sum(c.traffic_bytes
+                             for c in parse_collectives(hlo, W)),
         })
 print(json.dumps(res))
 """
@@ -145,6 +150,13 @@ def main():
         "rows": [{"name": n, "us_per_call": us, "derived": d}
                  for n, us, d in rows],
         "budgets_verified": True,   # assert_budget ran inside the sweep
+        # expected = CommRecord tape, measured = compiled-HLO ring-model
+        # bytes, summed over the sweep (per-case splits live in "cases")
+        "telemetry": telemetry_block(
+            expected_collective_bytes=sum(
+                c["comm"].get("total_bytes", 0) for c in res["cases"]),
+            measured_collective_bytes=sum(
+                c.get("hlo_bytes", 0) for c in res["cases"])),
     }
 
 

@@ -59,6 +59,40 @@ def write_bench_json(name: str, payload) -> str:
     return path
 
 
+def telemetry_block(*, phases=None, model_flops_per_call=None,
+                    wall_s=None, n_devices=1,
+                    expected_collective_bytes=None,
+                    measured_collective_bytes=None, **extra) -> dict:
+    """Assemble the optional ``telemetry`` block a bench attaches to its
+    BENCH_*.json payload (docs/observability.md): phase wall breakdown,
+    achieved MFU (``model_flops_per_call / wall_s`` against
+    ``n_devices × PEAK_FLOPS``), and the expected (CommRecord tape) vs
+    measured (compiled HLO) collective bytes.
+
+    Informational for now: scripts/bench_gate.py ignores metrics absent
+    from the stored baseline, so adding this block changes no gate
+    verdict — once baselines are refreshed the byte fields start gating
+    as traffic (any increase fails)."""
+    t = dict(extra)
+    if phases:
+        t["phases"] = {k: float(v) for k, v in phases.items()}
+    if wall_s is not None:
+        t["wall_s"] = float(wall_s)
+    if model_flops_per_call and wall_s:
+        from repro.launch.hlo_analysis import PEAK_FLOPS
+        achieved = model_flops_per_call / wall_s
+        t["achieved_flops"] = achieved
+        t["mfu"] = achieved / (PEAK_FLOPS * max(n_devices, 1))
+    if expected_collective_bytes is not None:
+        t["expected_collective_bytes"] = float(expected_collective_bytes)
+    if measured_collective_bytes is not None:
+        t["measured_collective_bytes"] = float(measured_collective_bytes)
+        if expected_collective_bytes:
+            t["measured_over_expected"] = \
+                float(measured_collective_bytes) / expected_collective_bytes
+    return t
+
+
 def _block(out):
     import jax
     jax.tree.map(lambda x: x.block_until_ready()

@@ -20,9 +20,10 @@ import traceback
 
 from benchmarks.common import write_bench_json
 
-BENCHES = ["fig3_speed", "comm_strategies", "kernels", "table2_convergence",
-           "table3_bidirectional", "table4_hybrid_ratio",
-           "table5_gather_splits", "table6_scalability"]
+BENCHES = ["fig3_speed", "comm_strategies", "kernels", "serve_throughput",
+           "table2_convergence", "table3_bidirectional",
+           "table4_hybrid_ratio", "table5_gather_splits",
+           "table6_scalability"]
 
 
 def main() -> None:

@@ -27,10 +27,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import telemetry_block
 from repro.configs import get_smoke
-from repro.configs.base import LayerSpec
+from repro.configs.base import LayerSpec, ShapeConfig
 from repro.models import model as M
+from repro.obs import InMemorySink
 from repro.serve.engine import ServeEngine
+
+BENCH_NAME = "serve"
 
 N_REQUESTS = 8
 MAX_BATCH = 4
@@ -45,11 +49,17 @@ def workload(vocab, seed=0):
 
 
 def engine_tokens_per_s(cfg, params, prompts):
+    """Returns (tokens/s, the warm engine) — latency percentiles, TTFT
+    and occupancy come off ``engine.stats()`` (the sink API)."""
     engine = ServeEngine(cfg, params, max_len=MAX_PROMPT + NEW_TOKENS,
-                         max_batch=MAX_BATCH)
+                         max_batch=MAX_BATCH, sink=InMemorySink())
     for i, p in enumerate(prompts):       # warmup: compile on these shapes
         engine.submit(p, NEW_TOKENS, seed=0, stream=i)
     engine.run()
+    # drop the warmup pass's compile-skewed latency samples so stats()
+    # reports warm-path percentiles
+    engine.reset_metrics()
+    engine.sink.records.clear()
     # timed run reuses the SAME engine — its jitted closures (and their
     # compile caches) live on the instance, so this measures decode, not XLA
     for i, p in enumerate(prompts):
@@ -58,7 +68,7 @@ def engine_tokens_per_s(cfg, params, prompts):
     results = engine.run()
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
-    return total / dt, engine.cache_stats()
+    return total / dt, engine
 
 
 def reprefill_tokens_per_s(cfg, params, prompts, steps=4):
@@ -108,28 +118,67 @@ def main():
                                 name="smoke-dense")
     hybrid = dense.linearize(hybrid_every=4)            # 3 linear + 1 softmax
 
+    payload = {"rows": [], "configs": {}}
     print("config,engine_tok_s,reprefill_tok_s,speedup,"
           "linear_state_bytes,kv_ring_bytes")
     for cfg in (pure, hybrid):
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         prompts = workload(cfg.vocab_size)
-        eng_tps, stats = engine_tokens_per_s(cfg, params, prompts)
+        eng_tps, engine = engine_tokens_per_s(cfg, params, prompts)
+        stats = engine.cache_stats()
+        s = engine.stats()
         base_tps = reprefill_tokens_per_s(cfg, params, prompts)
         print(f"{cfg.name},{eng_tps:.1f},{base_tps:.1f},"
               f"{eng_tps / base_tps:.1f}x,{stats['linear_state']},"
               f"{stats['kv_ring']}")
+        decode_p50 = s.get("decode_step_s_p50") or 0.0
+        payload["rows"].append({
+            "name": f"serve/{cfg.name}",
+            "us_per_call": decode_p50 * 1e6,    # warm decode-step median
+            "derived": f"engine_tok_s={eng_tps:.1f};"
+                       f"reprefill_tok_s={base_tps:.1f};"
+                       f"speedup={eng_tps / base_tps:.2f}x"})
+        # warm-path latency story off the sink API: TTFT + decode/prefill
+        # percentiles, queue/occupancy peaks, per-kind cache bytes, and
+        # the decode-step MFU (2·N_active·B model FLOPs per step)
+        shape = ShapeConfig("serve-decode", 1, MAX_BATCH, "decode")
+        from repro.launch.hlo_analysis import model_flops
+        payload["configs"][cfg.name] = {
+            "engine_tokens_per_s": eng_tps,
+            "reprefill_tokens_per_s": base_tps,
+            "cache_stats": stats,
+            "telemetry": telemetry_block(
+                phases={"prefill_s": s.get("prefill_s_mean", 0) *
+                        s.get("prefill_s_count", 0),
+                        "decode_s": s.get("decode_step_s_mean", 0) *
+                        s.get("decode_step_s_count", 0)},
+                model_flops_per_call=model_flops(cfg, shape),
+                wall_s=decode_p50 or None,
+                ttft_s_p50=s.get("ttft_s_p50"),
+                ttft_s_p99=s.get("ttft_s_p99"),
+                decode_step_s_p50=s.get("decode_step_s_p50"),
+                decode_step_s_p99=s.get("decode_step_s_p99"),
+                queue_depth_peak=s.get("queue_depth_peak"),
+                cache_occupancy_peak=s.get("cache_occupancy_peak"),
+                requests=int(s.get("evicted", 0))),
+        }
 
     print()
     print("context_len,linear_layer_cache_bytes,softmax_kv_cache_bytes")
     rows = cache_bytes_vs_context(pure)
     for ctx, lin, kv in rows:
         print(f"{ctx},{lin},{kv}")
+        payload["rows"].append({
+            "name": f"serve/cache@ctx{ctx}", "us_per_call": 0,
+            "derived": f"linear_layer_bytes={lin};softmax_kv_bytes={kv}"})
     spread = {lin for _, lin, _ in rows}
     assert len(spread) == 1, \
         f"linear-layer cache must be constant in context length, got {spread}"
     print("# linear-layer decode cache is CONSTANT in context length "
           "(paper's claim); softmax KV grows linearly")
+    return payload
 
 
 if __name__ == "__main__":
-    main()
+    from benchmarks.common import write_bench_json
+    write_bench_json(BENCH_NAME, main())

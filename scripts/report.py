@@ -1,0 +1,206 @@
+#!/usr/bin/env python
+"""Render a telemetry JSONL file (``--metrics-out``, docs/observability.md)
+into a markdown run report.
+
+The input is what a :class:`repro.obs.JsonlSink` wrote: flat records
+tagged ``kind`` ∈ {compile, step, event, request, summary}. The report
+covers, when the matching records are present:
+
+* **compile** — the flight recorder's expected-vs-measured collective
+  structure (CommRecord tape vs compiled HLO, per op) and any drift;
+* **steps** — wall percentiles, tokens/s, MFU, phase breakdown,
+  flagged stragglers;
+* **serve** — per-request TTFT / latency percentiles and the engine
+  summary (queue depth, cache occupancy, eviction counters);
+* **events / summary** — resume/signal/straggler events and run totals.
+
+  python scripts/report.py metrics.jsonl              # stdout
+  python scripts/report.py metrics.jsonl -o report.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import Histogram, read_jsonl  # noqa: E402
+
+
+def _fmt(v, digits=4):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e6 or abs(v) < 1e-3:
+            return f"{v:.3g}"
+        return f"{v:.{digits}g}"
+    return str(v)
+
+
+def _table(headers, rows):
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    out += ["| " + " | ".join(_fmt(c) for c in row) + " |" for row in rows]
+    return out
+
+
+def _hist(records, key):
+    h = Histogram()
+    h.extend(r[key] for r in records if isinstance(r.get(key), (int, float)))
+    return h
+
+
+def render(records) -> str:
+    by_kind = {}
+    for r in records:
+        by_kind.setdefault(r.get("kind", "?"), []).append(r)
+    lines = ["# Run report", "",
+             f"{len(records)} records: " +
+             ", ".join(f"{len(v)} {k}" for k, v in sorted(by_kind.items())),
+             ""]
+
+    for comp in by_kind.get("compile", []):
+        lines += ["## Compile: expected vs measured collectives", ""]
+        if comp.get("note"):
+            lines += [f"program: `{comp['note']}`", ""]
+        ops = sorted({k.split("/", 1)[1].rsplit("_", 1)[0]
+                      for k in comp if k.startswith(("tape/", "hlo/"))})
+        if ops:
+            rows = [(op,
+                     comp.get(f"tape/{op}_count", 0),
+                     comp.get(f"tape/{op}_bytes", 0),
+                     comp.get(f"hlo/{op}_count", 0),
+                     comp.get(f"hlo/{op}_bytes", 0)) for op in ops]
+            lines += _table(["op", "tape count", "tape bytes",
+                             "hlo count", "hlo bytes"], rows)
+        lines += ["",
+                  f"expected (tape) bytes/step: "
+                  f"{_fmt(comp.get('expected_collective_bytes'))} · "
+                  f"measured (hlo) bytes/step: "
+                  f"{_fmt(comp.get('hlo_collective_bytes'))}", ""]
+        drift = comp.get("drift") or []
+        if drift:
+            lines += ["**DRIFT FLAGGED:**", ""]
+            lines += [f"- {d}" for d in drift] + [""]
+        else:
+            lines += ["no drift: every collective the tape promises is in "
+                      "the compiled HLO.", ""]
+
+    steps = by_kind.get("step", [])
+    if steps:
+        lines += ["## Steps", ""]
+        wall = _hist(steps, "wall_s")
+        rows = [("wall_s", *[wall.summary()[k]
+                             for k in ("count", "mean", "p50", "p90",
+                                       "p99")])]
+        for key in ("tokens_per_s", "mfu", "loss"):
+            h = _hist(steps, key)
+            if h.count:
+                rows.append((key, *[h.summary()[k]
+                                    for k in ("count", "mean", "p50",
+                                              "p90", "p99")]))
+        lines += _table(["metric", "n", "mean", "p50", "p90", "p99"], rows)
+        lines += [""]
+
+        phase_keys = sorted({k for r in steps for k in r
+                             if k.endswith("_s") and k not in
+                             ("wall_s", "expected_wall_s",
+                              "tokens_per_s")})
+        if phase_keys:
+            lines += ["### Phase breakdown", ""]
+            total_wall = wall.total or 1.0
+            rows = []
+            for k in phase_keys:
+                h = _hist(steps, k)
+                rows.append((k, _fmt(h.mean), _fmt(h.percentile(50)),
+                             _fmt(h.percentile(99)),
+                             f"{h.total / total_wall:.1%}"))
+            lines += _table(["phase", "mean", "p50", "p99",
+                             "share of wall"], rows) + [""]
+
+        stragglers = [r for r in steps if r.get("straggler")]
+        if stragglers:
+            lines += ["### Stragglers", ""]
+            lines += _table(
+                ["step", "wall_s", "expected_wall_s"],
+                [(r.get("step"), r.get("wall_s"),
+                  r.get("expected_wall_s")) for r in stragglers]) + [""]
+        else:
+            lines += ["no straggler steps flagged.", ""]
+
+        comm = [r for r in steps if "expected_collective_bytes" in r]
+        if comm:
+            r = comm[-1]
+            lines += [f"collective bytes/step: expected "
+                      f"{_fmt(r['expected_collective_bytes'])}, measured "
+                      f"{_fmt(r.get('hlo_collective_bytes'))}"
+                      + (f" · {_fmt(r['comm_bytes_per_token'])} B/token"
+                         if r.get("comm_bytes_per_token") else ""), ""]
+
+    reqs = by_kind.get("request", [])
+    if reqs:
+        lines += ["## Serve requests", ""]
+        rows = []
+        for key in ("ttft_s", "wall_s", "new_tokens", "prompt_len"):
+            h = _hist(reqs, key)
+            if h.count:
+                rows.append((key, *[h.summary()[k]
+                                    for k in ("count", "mean", "p50",
+                                              "p90", "p99")]))
+        lines += _table(["metric", "n", "mean", "p50", "p90", "p99"], rows)
+        reasons = {}
+        for r in reqs:
+            reasons[r.get("finish_reason")] = \
+                reasons.get(r.get("finish_reason"), 0) + 1
+        lines += ["", "finish reasons: " +
+                  ", ".join(f"{k}={v}" for k, v in sorted(reasons.items())),
+                  ""]
+
+    events = by_kind.get("event", [])
+    if events:
+        lines += ["## Events", ""]
+        lines += _table(["event", "details"],
+                        [(r.get("event"),
+                          "; ".join(f"{k}={_fmt(v)}" for k, v in
+                                    sorted(r.items())
+                                    if k not in ("kind", "event")))
+                         for r in events]) + [""]
+
+    for summ in by_kind.get("summary", []):
+        name = summ.get("component", "run")
+        lines += [f"## Summary ({name})", ""]
+        lines += _table(["field", "value"],
+                        [(k, v) for k, v in sorted(summ.items())
+                         if k not in ("kind", "component")
+                         and not isinstance(v, (list, dict))]) + [""]
+
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="telemetry JSONL (--metrics-out file)")
+    ap.add_argument("-o", "--out", default=None,
+                    help="write markdown here (default: stdout)")
+    args = ap.parse_args()
+
+    records = read_jsonl(args.jsonl)
+    if not records:
+        print(f"error: no records in {args.jsonl}", file=sys.stderr)
+        sys.exit(1)
+    md = render(records)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"wrote {args.out} ({len(records)} records)")
+    else:
+        print(md)
+
+
+if __name__ == "__main__":
+    main()

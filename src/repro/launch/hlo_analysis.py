@@ -267,6 +267,23 @@ def measure(compiled, total_devices: int) -> CostVector:
         coll_by_op=by_op)
 
 
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D (train), 2·N_active·D (prefill),
+    2·N_active·B (decode, D = one token per row).
+
+    Lives here (not in ``repro.launch.roofline``, which re-exports it)
+    so runtime telemetry (``repro.obs``) can compute achieved-MFU
+    without importing the roofline module, whose import sets the
+    512-virtual-device ``XLA_FLAGS`` for its own subprocesses.
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
 def roofline_terms(cost: CostVector) -> Dict[str, float]:
     """The three per-step time lower bounds, in seconds (per chip; FLOPs
     and bytes here are already per-device post-SPMD)."""

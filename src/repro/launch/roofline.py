@@ -88,15 +88,9 @@ def _rebuild_train_cell(arch, shape_name, mesh, cfg, run):
                 (sspec, bspec), (0,))
 
 
-def model_flops(cfg, shape) -> float:
-    """MODEL_FLOPS: 6·N_active·D (train), 2·N_active·D (prefill),
-    2·N_active·B (decode, D = one token per row)."""
-    n = cfg.active_param_count()
-    if shape.kind == "train":
-        return 6.0 * n * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n * shape.global_batch * shape.seq_len
-    return 2.0 * n * shape.global_batch
+# single source of truth moved to hlo_analysis (import-side-effect-free)
+# so repro.obs can reuse it; re-exported here for back-compat.
+from repro.launch.hlo_analysis import model_flops  # noqa: E402, F401
 
 
 def run_one(arch: str, shape_name: str, out_dir: str, *,

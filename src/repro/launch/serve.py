@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write serve telemetry (per-request records + "
+                         "summary with TTFT / decode-latency percentiles) "
+                         "as JSONL here (docs/observability.md)")
     args = ap.parse_args()
 
     import jax
@@ -47,9 +51,14 @@ def main():
             params = state["params"]
             print(f"[serve] restored params from step {step}")
 
+    sink = None
+    if args.metrics_out:
+        from repro.obs import JsonlSink
+        sink = JsonlSink(args.metrics_out)
+
     max_len = args.prompt_len + args.new_tokens
     engine = ServeEngine(cfg, params, max_len=max_len,
-                         max_batch=args.max_batch)
+                         max_batch=args.max_batch, sink=sink)
 
     if cfg.encoder is not None or cfg.n_image_tokens:
         # encoder / image-conditioned models run the static-batch path
@@ -93,6 +102,18 @@ def main():
     print(f"[serve] cache bytes: linear_state={stats['linear_state']} "
           f"kv_ring={stats['kv_ring']} conv={stats['conv']} "
           f"total={stats['total']}")
+    s = engine.stats()
+    if "ttft_s_p50" in s:
+        print(f"[serve] ttft p50 {s['ttft_s_p50']*1e3:.1f}ms "
+              f"p99 {s['ttft_s_p99']*1e3:.1f}ms; decode p50 "
+              f"{s.get('decode_step_s_p50', 0)*1e3:.1f}ms p99 "
+              f"{s.get('decode_step_s_p99', 0)*1e3:.1f}ms; "
+              f"queue_depth peak {s.get('queue_depth_peak', 0):.0f}; "
+              f"{s.get('decode_tokens_per_s', 0):.1f} decode tok/s")
+    if sink is not None:
+        engine.emit_summary(requests=len(results))
+        sink.close()
+        print(f"[serve] telemetry -> {args.metrics_out}")
     print("[serve] first result:", results[uids[0]][:16], "...")
 
 

@@ -57,6 +57,11 @@ def main():
                     help="wire dtype of the SP state/KV exchanges (bf16 "
                          "halves per-layer collective bytes; combines "
                          "stay fp32 — docs/communication.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write run telemetry (per-step phase walls, "
+                         "tokens/s, MFU, expected-vs-compiled collective "
+                         "bytes) as JSONL here; render with "
+                         "scripts/report.py (docs/observability.md)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=["xla", "pallas", "interpret"],
                     help="intra-chunk/attention kernel path "
@@ -123,9 +128,18 @@ def main():
                          comm_strategy=run.comm_strategy,
                          comm_overlap=run.comm_overlap,
                          comm_dtype=run.comm_dtype)
-    state, history = train(cfg, run, data, plan=plan,
-                           ckpt_dir=args.ckpt_dir,
-                           ckpt_every=args.ckpt_every)
+    sink = None
+    if args.metrics_out:
+        from repro.obs import JsonlSink
+        sink = JsonlSink(args.metrics_out)
+    try:
+        state, history = train(cfg, run, data, plan=plan,
+                               ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every, sink=sink)
+    finally:
+        if sink is not None:
+            sink.close()
+            print(f"[train] telemetry -> {args.metrics_out}")
     first = sum(h["loss"] for h in history[:10]) / max(len(history[:10]), 1)
     last = sum(h["loss"] for h in history[-10:]) / max(len(history[-10:]), 1)
     print(f"[train] {cfg.name}: loss {first:.4f} -> {last:.4f} over "

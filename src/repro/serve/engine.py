@@ -27,7 +27,8 @@ API::
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.obs.metrics import Metrics, as_sink
 from repro.serve.scheduler import ContinuousScheduler, PrefillBatch, Request
 from repro.sharding.rules import Parallelism, local_plan
 
@@ -42,18 +44,27 @@ from repro.sharding.rules import Parallelism, local_plan
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  plan: Optional[Parallelism] = None, max_len: int = 2048,
-                 max_batch: int = 8, bucket_lengths: Optional[bool] = None):
+                 max_batch: int = 8, bucket_lengths: Optional[bool] = None,
+                 sink=None):
         self.cfg = cfg
         self.params = params
         self.plan = plan or local_plan()
         self.max_len = max_len
         self.max_batch = max_batch
+        # Telemetry (docs/observability.md): one Metrics registry shared
+        # with the scheduler; per-request records go to ``sink`` as each
+        # request finishes. All host-side — no device ops are added.
+        self.sink = as_sink(sink)
+        self.metrics = Metrics()
+        self._submit_t: Dict[int, float] = {}
+        self._ttft: Dict[int, float] = {}
         # Length bucketing left-pads prompts, which is only exact for pure
         # recurrent stacks; hybrids fall back to exact-length groups.
         self.bucket_lengths = M.pad_safe(cfg) if bucket_lengths is None \
             else bucket_lengths
         self.sched = ContinuousScheduler(max_batch, max_len,
-                                         bucket_lengths=self.bucket_lengths)
+                                         bucket_lengths=self.bucket_lengths,
+                                         metrics=self.metrics)
 
         self._cache = M.init_cache(cfg, max_batch, max_len)
         self._tok = np.zeros((max_batch,), np.int32)
@@ -109,6 +120,10 @@ class ServeEngine:
             lambda p, f: M.encode(p, f, cfg, self.plan)) \
             if cfg.encoder is not None else None
 
+        for kind, nbytes in self.cache_stats().items():
+            if not kind.endswith("_arrays"):
+                self.metrics.gauge(f"cache_bytes_{kind}", nbytes)
+
     # -- request API --------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int, *,
@@ -118,9 +133,11 @@ class ServeEngine:
 
         ``(seed, stream)`` names the request's RNG stream — sampling is
         deterministic in it, independent of how requests get batched."""
-        return self.sched.submit(prompt, max_new_tokens,
-                                 temperature=temperature, eos_id=eos_id,
-                                 seed=seed, stream=stream)
+        uid = self.sched.submit(prompt, max_new_tokens,
+                                temperature=temperature, eos_id=eos_id,
+                                seed=seed, stream=stream)
+        self._submit_t[uid] = time.perf_counter()
+        return uid
 
     def step(self) -> List[Request]:
         """One scheduler tick: admit + prefill waiting requests into free
@@ -130,17 +147,28 @@ class ServeEngine:
         for batch in self.sched.admit():
             finished += self._admit(batch)
         if self.sched.active:
-            logits, self._cache = self._decode(
-                self.params, jnp.asarray(self._tok), self._cache)
-            steps = np.array([len(r.tokens) if r is not None else 0
-                              for r in self.sched.slots], np.int32)
-            tok = np.asarray(self._sample(
-                logits, jnp.asarray(self._temps), jnp.asarray(self._keys),
-                jnp.asarray(steps)))
+            t0 = time.perf_counter()
+            with jax.named_scope("decode"):
+                logits, self._cache = self._decode(
+                    self.params, jnp.asarray(self._tok), self._cache)
+                steps = np.array([len(r.tokens) if r is not None else 0
+                                  for r in self.sched.slots], np.int32)
+                tok = np.asarray(self._sample(
+                    logits, jnp.asarray(self._temps),
+                    jnp.asarray(self._keys), jnp.asarray(steps)))
             active = [i for i, r in enumerate(self.sched.slots)
                       if r is not None]
+            # np.asarray above blocked on the device, so the wall is fenced
+            self.metrics.observe("decode_step_s", time.perf_counter() - t0)
+            self.metrics.inc("decode_steps")
+            self.metrics.inc("decode_tokens", len(active))
             self._tok[active] = tok[active]
             finished += self.sched.record_step(tok)
+        n_active = len(self.sched.active)
+        self.metrics.gauge("active_slots", n_active)
+        self.metrics.gauge("cache_occupancy", n_active / self.max_batch)
+        for r in finished:
+            self._finish(r)
         return finished
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -152,28 +180,54 @@ class ServeEngine:
         return {r.uid: np.asarray(r.tokens, np.int32) for r in done}
 
     def _admit(self, batch: PrefillBatch) -> List[Request]:
-        if self.bucket_lengths:
-            logits, small = self._prefill(
-                self.params, jnp.asarray(batch.prompts),
-                jnp.asarray(batch.pad_lens))
-        else:
-            logits, small = self._prefill_exact(
-                self.params, jnp.asarray(batch.prompts))
-        slots = jnp.asarray(batch.slots)
-        self._cache = self._insert(self._cache, small, slots)
-        temps = np.array([r.temperature for r in batch.requests], np.float32)
-        keys = np.stack([
-            np.asarray(jax.random.fold_in(jax.random.PRNGKey(r.seed),
-                                          r.stream), np.uint32)
-            for r in batch.requests])
-        tok = np.asarray(self._sample(
-            logits, jnp.asarray(temps), jnp.asarray(keys),
-            jnp.zeros((len(batch.requests),), jnp.int32)))
+        t0 = time.perf_counter()
+        with jax.named_scope("prefill"):
+            if self.bucket_lengths:
+                logits, small = self._prefill(
+                    self.params, jnp.asarray(batch.prompts),
+                    jnp.asarray(batch.pad_lens))
+            else:
+                logits, small = self._prefill_exact(
+                    self.params, jnp.asarray(batch.prompts))
+            slots = jnp.asarray(batch.slots)
+            self._cache = self._insert(self._cache, small, slots)
+            temps = np.array([r.temperature for r in batch.requests],
+                             np.float32)
+            keys = np.stack([
+                np.asarray(jax.random.fold_in(jax.random.PRNGKey(r.seed),
+                                              r.stream), np.uint32)
+                for r in batch.requests])
+            tok = np.asarray(self._sample(
+                logits, jnp.asarray(temps), jnp.asarray(keys),
+                jnp.zeros((len(batch.requests),), jnp.int32)))
+        now = time.perf_counter()
+        self.metrics.observe("prefill_s", now - t0)
+        self.metrics.inc("prefill_batches")
+        self.metrics.inc("prefill_tokens", int(batch.prompts.size))
         for j, r in enumerate(batch.requests):
             self._tok[r.slot] = tok[j]
             self._temps[r.slot] = r.temperature
             self._keys[r.slot] = keys[j]
+            # TTFT: submit() → the request's first token, which is sampled
+            # right here from the prefill logits (not from the first
+            # decode step)
+            self._ttft[r.uid] = now - self._submit_t.get(r.uid, t0)
+            self.metrics.observe("ttft_s", self._ttft[r.uid])
         return self.sched.record_prefill(batch, tok)
+
+    def _finish(self, req: Request) -> None:
+        """Emit the per-request telemetry record (kind="request")."""
+        now = time.perf_counter()
+        rec: Dict[str, Any] = {
+            "kind": "request", "uid": req.uid,
+            "prompt_len": req.prompt_len, "new_tokens": len(req.tokens),
+            "finish_reason": req.finish_reason,
+            "wall_s": now - self._submit_t.pop(req.uid, now),
+        }
+        ttft = self._ttft.pop(req.uid, None)
+        if ttft is not None:
+            rec["ttft_s"] = ttft
+        self.sink.emit(rec)
 
     # -- one-shot batch API (back-compat) -----------------------------------
 
@@ -243,25 +297,66 @@ class ServeEngine:
 
     # -- introspection ------------------------------------------------------
 
+    def stats(self) -> Dict[str, Any]:
+        """Flat snapshot of the engine+scheduler telemetry: counters
+        (submitted/admitted/evicted/…), gauges (queue_depth,
+        cache_occupancy + peaks), and latency histogram summaries
+        (``decode_step_s_p50`` … ``ttft_s_p99``), plus the derived
+        steady-state decode throughput."""
+        out = self.metrics.snapshot()
+        dec = self.metrics.histograms.get("decode_step_s")
+        if dec is not None and dec.total:
+            out["decode_tokens_per_s"] = \
+                self.metrics.counters.get("decode_tokens", 0) / dec.total
+        return out
+
+    def reset_metrics(self) -> None:
+        """Drop accumulated telemetry (e.g. after a compile-warmup pass,
+        so percentiles reflect the warm path); the fresh registry is
+        re-shared with the scheduler and the static cache gauges
+        re-seeded."""
+        self.metrics = self.sched.metrics = Metrics()
+        for kind, nbytes in self.cache_stats().items():
+            if not kind.endswith("_arrays"):
+                self.metrics.gauge(f"cache_bytes_{kind}", nbytes)
+
+    def emit_summary(self, **extra) -> Dict[str, Any]:
+        """Emit (and return) the run-level ``summary`` record through the
+        sink — the serve-side analogue of the train flight recorder's
+        summary."""
+        rec: Dict[str, Any] = {"kind": "summary", "component": "serve"}
+        rec.update(self.stats())
+        rec.update(extra)
+        self.sink.emit(rec)
+        return rec
+
     def cache_stats(self) -> Dict[str, int]:
-        """Decode-cache footprint by kind (bytes). ``linear_state`` (+ its
+        """Decode-cache footprint by kind — byte-accurate totals plus the
+        array count per kind (``<kind>_arrays``). ``linear_state`` (+ its
         log decays) is constant in both context length and max_len — the
         paper's claim; ``kv_ring`` scales with the softmax layers' window,
-        not the context."""
+        not the context. Exact expectations (asserted in the serve tests):
+        per linear layer ``B·H·(dk·dv + 1)·4`` bytes (fp32 state + log
+        decay), per softmax layer ``2·B·n_kv·ring·head_dim·2`` (bf16 K/V)
+        ``+ B·ring·4`` (int32 positions)."""
         stats = {"linear_state": 0, "kv_ring": 0, "conv": 0, "other": 0}
+        arrays = dict.fromkeys(stats, 0)
 
         def visit(path, leaf):
             name = path[-1].key if hasattr(path[-1], "key") else ""
             if name in ("m", "log_decay"):
-                stats["linear_state"] += leaf.nbytes
+                kind = "linear_state"
             elif name in ("k", "v", "kpos"):
-                stats["kv_ring"] += leaf.nbytes
+                kind = "kv_ring"
             elif name.startswith("conv_"):
-                stats["conv"] += leaf.nbytes
+                kind = "conv"
             else:
-                stats["other"] += leaf.nbytes
+                kind = "other"
+            stats[kind] += leaf.nbytes
+            arrays[kind] += 1
             return leaf
 
         jax.tree_util.tree_map_with_path(visit, self._cache["layers"])
         stats["total"] = sum(stats.values())
+        stats.update({f"{k}_arrays": n for k, n in arrays.items()})
         return stats

@@ -26,6 +26,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.metrics import Metrics
+
 
 def bucket_length(n: int, *, minimum: int = 16) -> int:
     """Next power of two >= n (floored at ``minimum``)."""
@@ -81,14 +83,21 @@ class PrefillBatch:
 
 
 class ContinuousScheduler:
-    """Admit/evict requests over a fixed grid of decode slots."""
+    """Admit/evict requests over a fixed grid of decode slots.
+
+    ``metrics`` (a :class:`repro.obs.Metrics` registry, usually the
+    engine's) receives the scheduler-side telemetry: ``submitted`` /
+    ``admitted`` / ``evicted`` / ``finished_<reason>`` counters and the
+    ``queue_depth`` gauge (+peak)."""
 
     def __init__(self, max_batch: int, max_len: int, *,
-                 bucket_lengths: bool = False, pad_token: int = 0):
+                 bucket_lengths: bool = False, pad_token: int = 0,
+                 metrics: Optional[Metrics] = None):
         self.max_batch = max_batch
         self.max_len = max_len
         self.bucket_lengths = bucket_lengths
         self.pad_token = pad_token
+        self.metrics = metrics if metrics is not None else Metrics()
         self.waiting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.finished: Dict[int, Request] = {}
@@ -113,6 +122,8 @@ class ContinuousScheduler:
                       max_new_tokens=max_new_tokens, temperature=temperature,
                       eos_id=eos_id, seed=seed, stream=stream)
         self.waiting.append(req)
+        self.metrics.inc("submitted")
+        self.metrics.gauge("queue_depth", len(self.waiting))
         return req.uid
 
     # -- state queries ------------------------------------------------------
@@ -137,6 +148,8 @@ class ContinuousScheduler:
             return []
         take = self.waiting[:len(free)]
         self.waiting = self.waiting[len(take):]
+        self.metrics.inc("admitted", len(take))
+        self.metrics.gauge("queue_depth", len(self.waiting))
 
         groups: Dict[int, List[Request]] = {}
         for r in take:
@@ -184,4 +197,6 @@ class ContinuousScheduler:
     def _evict(self, req: Request) -> Request:
         self.slots[req.slot] = None
         self.finished[req.uid] = req
+        self.metrics.inc("evicted")
+        self.metrics.inc(f"finished_{req.finish_reason}")
         return req

@@ -579,6 +579,84 @@ def _():
     assert_axis_budget(txt, mesh, budget)
 
 
+@check(f"({DP},{SP}) flight recorder: tape == expected bytes, drift flags",
+       section="2d")
+def _():
+    """The compile-time flight recorder (docs/observability.md) on a
+    REAL (DP,SP) train step: the CommRecord tape captured while lowering
+    is the 'expected' collective view, the compiled HLO the 'measured'
+    one. The snapshot's expected bytes must equal the tape total and the
+    genuine program must not flag drift (autodiff's extra collectives
+    are tolerated by design); an injected fake tape record must."""
+    from repro.comm import tape
+    from repro.comm.primitives import CommRecord, tape_summary
+    from repro.obs import FlightRecorder, InMemorySink
+
+    run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
+                    warmup_steps=2)
+    mesh = make_training_mesh(DP, SP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads)
+    state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
+    step = jax.jit(make_train_step(_cfg2d, run, plan))
+    with tape() as records:
+        lowered = step.lower(state, _data2d.microbatched(0, 1))
+    hlo = lowered.compile().as_text()
+
+    sink = InMemorySink()
+    fr = FlightRecorder(sink)
+    snap = fr.on_compile(records=records, hlo_text=hlo, total_devices=8)
+    expect = tape_summary(records)
+    assert snap.expected_bytes_per_step == expect["total_bytes"]
+    assert snap.expected_steps_per_step == expect["total_steps"]
+    if SP > 1:
+        # sequence sharding ⇒ the layers' state gathers are on the tape
+        assert snap.tape_counts.get("all-gather", 0) >= 1
+        assert snap.hlo_counts.get("all-gather", 0) >= \
+            snap.tape_counts["all-gather"]
+    assert snap.drift == [], snap.drift
+    (rec,) = sink.by_kind("compile")
+    assert rec["expected_collective_bytes"] == expect["total_bytes"]
+
+    # inject drift: a collective the compiled program does not carry
+    bad = list(records) + [CommRecord("all-to-all", 10, 70, 1, 8)]
+    snap2 = FlightRecorder(InMemorySink()).on_compile(
+        records=bad, hlo_text=hlo, total_devices=8)
+    assert any("all-to-all" in d for d in snap2.drift), \
+        "injected tape record must flag drift"
+
+
+@check(f"({DP},{SP}) instrumented train: step records on the 2D mesh",
+       section="2d")
+def _():
+    """train(sink=...) on the DP×SP mesh: the AOT-compiled instrumented
+    path matches the uninstrumented losses and every step record carries
+    the throughput + comm fields the report renders."""
+    from repro.obs import InMemorySink
+    from repro.train.loop import train
+
+    mesh = make_training_mesh(DP, SP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads)
+    sink = InMemorySink()
+    kw = dict(log_every=10 ** 9, log_fn=lambda *_: None, max_steps=2)
+    _, hist = train(_cfg2d, _RUN2D, _data2d, plan=plan, sink=sink, **kw)
+    _, ref = train(_cfg2d, _RUN2D, _data2d, plan=plan, **kw)
+    np.testing.assert_allclose([h["loss"] for h in hist],
+                               [h["loss"] for h in ref], rtol=0, atol=0)
+    (comp,) = sink.by_kind("compile")
+    assert comp["drift"] == []
+    if SP > 1:
+        assert comp["expected_collective_bytes"] > 0
+    steps = sink.by_kind("step")
+    assert len(steps) == 2
+    for r in steps:
+        assert {"step_s", "data_s", "wall_s", "tokens_per_s", "mfu",
+                "expected_collective_bytes", "hlo_collective_bytes",
+                "straggler"} <= set(r)
+        assert r["tokens"] == 8 * 64
+
+
 if __name__ == "__main__":
     extra = f" ({len(SKIPPED)} base checks skipped: 2D-only)" \
         if SKIPPED else ""

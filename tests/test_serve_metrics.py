@@ -1,0 +1,166 @@
+"""Serving telemetry (docs/observability.md): engine/scheduler metrics
+through the sink API, and byte-accurate cache_stats totals."""
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.obs import InMemorySink
+from repro.serve.engine import ServeEngine
+
+
+def _engine(cfg, rng, *, max_len=96, max_batch=4, sink=None):
+    params = M.init_params(rng, cfg)
+    return ServeEngine(cfg, params, max_len=max_len, max_batch=max_batch,
+                       sink=sink)
+
+
+def _hybrid_smoke():
+    """2 linear + 1 windowed-softmax + 1 dense-mlp linear layer."""
+    import dataclasses
+    from repro.configs.base import LayerSpec
+    base = get_smoke("linear-llama3-1b")
+    dense = dataclasses.replace(base, pattern=(LayerSpec(),), n_layers=4,
+                                name="smoke-dense")
+    return dense.linearize(hybrid_every=4)
+
+
+def test_engine_latency_and_queue_metrics(rng):
+    cfg = get_smoke("linear-llama3-1b")
+    sink = InMemorySink()
+    engine = _engine(cfg, rng, max_batch=2, sink=sink)
+    # 5 requests through 2 slots: the queue must back up, then drain
+    uids = [engine.submit(np.arange(4 + i) % cfg.vocab_size, 4, stream=i)
+            for i in range(5)]
+    results = engine.run()
+    assert set(results) == set(uids)
+
+    s = engine.stats()
+    assert s["submitted"] == 5
+    assert s["admitted"] == 5
+    assert s["evicted"] == 5
+    assert s["finished_length"] == 5
+    assert s["queue_depth"] == 0, "drained queue must read 0"
+    assert s["queue_depth_peak"] >= 3, "5 requests into 2 slots must queue"
+    assert s["cache_occupancy_peak"] == 1.0
+    assert s["active_slots"] == 0
+
+    # latency histograms exposed as p50/p99 via the sink-API snapshot
+    assert s["ttft_s_count"] == 5
+    assert 0 < s["ttft_s_p50"] <= s["ttft_s_p99"]
+    assert s["decode_step_s_count"] >= 4
+    assert 0 < s["decode_step_s_p50"] <= s["decode_step_s_p99"]
+    assert 0 < s["prefill_s_p50"]
+    assert s["decode_tokens_per_s"] > 0
+    # decode counter arithmetic: tokens = sum of active slots per step
+    assert s["decode_tokens"] <= 2 * s["decode_steps"]
+
+    # per-request records flowed through the sink as requests finished
+    reqs = sink.by_kind("request")
+    assert len(reqs) == 5
+    assert {r["uid"] for r in reqs} == set(uids)
+    for r in reqs:
+        assert r["finish_reason"] == "length"
+        assert r["new_tokens"] == 4
+        assert 0 < r["ttft_s"] <= r["wall_s"]
+
+    summ = engine.emit_summary(requests=len(results))
+    assert summ["kind"] == "summary" and summ["component"] == "serve"
+    assert summ["requests"] == 5 and summ["ttft_s_count"] == 5
+    assert sink.by_kind("summary")[-1] == summ
+
+
+def test_reset_metrics_drops_history_keeps_cache_gauges(rng):
+    cfg = get_smoke("linear-llama3-1b")
+    engine = _engine(cfg, rng, max_batch=2)
+    engine.generate(jax.random.randint(rng, (2, 8), 0, cfg.vocab_size), 4)
+    assert engine.stats()["submitted"] == 2
+    engine.reset_metrics()
+    s = engine.stats()
+    assert "submitted" not in s and "ttft_s_count" not in s
+    # static cache gauges are re-seeded on the fresh registry
+    assert s["cache_bytes_total"] == engine.cache_stats()["total"]
+    # the fresh registry is re-shared with the scheduler
+    engine.generate(jax.random.randint(rng, (1, 8), 0, cfg.vocab_size), 2)
+    assert engine.stats()["submitted"] == 1
+
+
+def test_cache_stats_byte_accurate_pure_linear(rng):
+    cfg = get_smoke("linear-llama3-1b")
+    B = 4
+    engine = _engine(cfg, rng, max_len=96, max_batch=B)
+    stats = engine.cache_stats()
+    n_linear = sum(1 for s in cfg.pattern if s.mixer == "linear") \
+        * cfg.n_groups
+    dk = dv = cfg.head_dim
+    # per layer: fp32 m (B,H,dk,dv) + fp32 log_decay (B,H)
+    expect = n_linear * (B * cfg.n_heads * dk * dv * 4 +
+                         B * cfg.n_heads * 4)
+    assert stats["linear_state"] == expect == \
+        n_linear * B * cfg.n_heads * (dk * dv + 1) * 4
+    assert stats["kv_ring"] == 0
+    # m + log_decay per pattern entry (n_groups stacks a leading dim on
+    # the same arrays rather than adding arrays)
+    assert stats["linear_state_arrays"] == 2 * len(
+        [s for s in cfg.pattern if s.mixer == "linear"])
+    assert stats["total"] == sum(
+        stats[k] for k in ("linear_state", "kv_ring", "conv", "other"))
+
+
+def test_cache_stats_byte_accurate_hybrid(rng):
+    cfg = _hybrid_smoke()
+    B, max_len = 3, 80
+    engine = _engine(cfg, rng, max_len=max_len, max_batch=B)
+    stats = engine.cache_stats()
+
+    linear_specs = [s for s in cfg.pattern if s.mixer == "linear"]
+    softmax_specs = [s for s in cfg.pattern if s.mixer == "softmax"]
+    assert len(linear_specs) == 3 and len(softmax_specs) == 1
+
+    dk = dv = cfg.head_dim
+    expect_linear = len(linear_specs) * cfg.n_groups \
+        * B * cfg.n_heads * (dk * dv + 1) * 4
+    assert stats["linear_state"] == expect_linear
+
+    expect_kv = 0
+    for spec in softmax_specs:
+        ring = min(max_len, spec.sliding_window) if spec.sliding_window \
+            else max_len
+        # bf16 K + V, int32 kpos per softmax layer
+        expect_kv += cfg.n_groups * (
+            2 * B * cfg.n_kv_heads * ring * cfg.head_dim * 2 + B * ring * 4)
+    assert stats["kv_ring"] == expect_kv
+    assert stats["kv_ring_arrays"] == 3 * len(softmax_specs)  # k, v, kpos
+
+    # the paper's claim in bytes: the linear portion is constant in
+    # max_len while the ring only tracks the window
+    far = _engine(cfg, rng, max_len=4 * max_len, max_batch=B).cache_stats()
+    assert far["linear_state"] == stats["linear_state"]
+    window = softmax_specs[0].sliding_window
+    assert window, "hybrid softmax layers must be windowed"
+    if 4 * max_len <= window:
+        ratio = 4 * max_len / max_len
+        assert far["kv_ring"] == stats["kv_ring"] * ratio
+
+
+def test_cache_gauges_seeded_at_construction(rng):
+    cfg = get_smoke("linear-llama3-1b")
+    engine = _engine(cfg, rng)
+    s = engine.stats()
+    stats = engine.cache_stats()
+    assert s["cache_bytes_linear_state"] == stats["linear_state"]
+    assert s["cache_bytes_total"] == stats["total"]
+    assert "cache_bytes_linear_state_arrays" not in s
+
+
+def test_null_sink_engine_behaves_identically(rng):
+    """sink=None must not change generated tokens (telemetry is
+    host-side only)."""
+    cfg = get_smoke("linear-llama3-1b")
+    prompts = jax.random.randint(rng, (3, 8), 0, cfg.vocab_size)
+    params = M.init_params(rng, cfg)
+    a = ServeEngine(cfg, params, max_len=64).generate(prompts, 6)
+    b = ServeEngine(cfg, params, max_len=64,
+                    sink=InMemorySink()).generate(prompts, 6)
+    np.testing.assert_array_equal(a, b)

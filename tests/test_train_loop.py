@@ -73,6 +73,21 @@ def test_watchdog_flags_stragglers():
     assert wd.slow_steps == 1
 
 
+def test_watchdog_compile_spike_cannot_poison_window():
+    """The first recorded step carries trace+compile (or resume) time —
+    often 100x a warm step. It must be swallowed by the warmup, never
+    flagged, and never enter the rolling window the median is taken
+    over, so later genuinely-slow steps still trip the detector."""
+    wd = StepWatchdog(factor=3.0, warmup=1)
+    assert wd.record(30.0) is False, "compile spike must not be flagged"
+    for _ in range(12):
+        assert not wd.record(0.1)
+    assert 30.0 not in wd.times, \
+        "warmup duration must be excluded from the rolling window"
+    assert wd.record(0.5) is True, "5x the warm median must still flag"
+    assert wd.slow_steps == 1
+
+
 def test_checkpoints_pruned(tmp_path):
     cfg = get_smoke("linear-llama3-1b")
     run = RunConfig(num_microbatches=1, total_steps=20, warmup_steps=2,
