@@ -53,7 +53,9 @@ def md_files():
     for p in ROOT.glob("*.md"):
         if p.name not in SKIP:
             yield p
-    yield from (ROOT / "docs").rglob("*.md")
+    for p in (ROOT / "docs").rglob("*.md"):
+        if "__pycache__" not in p.parts:
+            yield p
 
 
 def check_file(md: Path):

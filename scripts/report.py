@@ -14,13 +14,20 @@ covers, when the matching records are present:
   summary (queue depth, cache occupancy, eviction counters);
 * **events / summary** — resume/signal/straggler events and run totals.
 
+Also renders the static-analysis findings document that
+``python -m repro.analysis --json`` writes (a single JSON object with a
+``findings`` key, docs/static_analysis.md) — the CI ``analysis`` job
+feeds its artifact through here.
+
   python scripts/report.py metrics.jsonl              # stdout
   python scripts/report.py metrics.jsonl -o report.md
+  python scripts/report.py analysis_findings.json -o analysis_report.md
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -182,18 +189,61 @@ def render(records) -> str:
     return "\n".join(lines).rstrip() + "\n"
 
 
+def render_analysis(doc: dict) -> str:
+    """Markdown for a ``python -m repro.analysis --json`` document."""
+    checked = ", ".join(f"{v} {k}" for k, v in sorted(
+        (doc.get("checked") or {}).items()))
+    lines = ["# Static-analysis report", "",
+             ("**PASS**" if doc.get("ok") else "**FAIL**")
+             + (f" — checked {checked}" if checked else ""), ""]
+    findings = doc.get("findings") or []
+    if findings:
+        counts = doc.get("counts") or {}
+        lines += [", ".join(f"{k}×{v}" for k, v in sorted(counts.items())),
+                  ""]
+        lines += _table(
+            ["code", "location", "message"],
+            [(f["code"],
+              f"{f['path']}:{f['line']}" if f.get("line") else f["path"],
+              f["message"]) for f in findings]) + [""]
+    else:
+        lines += ["no findings.", ""]
+    suppressed = doc.get("suppressed") or []
+    if suppressed:
+        lines += [f"## Suppressed ({len(suppressed)})", ""]
+        lines += _table(
+            ["code", "location", "message"],
+            [(f["code"],
+              f"{f['path']}:{f['line']}" if f.get("line") else f["path"],
+              f["message"]) for f in suppressed]) + [""]
+    return "\n".join(lines).rstrip() + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("jsonl", help="telemetry JSONL (--metrics-out file)")
+    ap.add_argument("jsonl", help="telemetry JSONL (--metrics-out file) "
+                                  "or a repro.analysis findings JSON")
     ap.add_argument("-o", "--out", default=None,
                     help="write markdown here (default: stdout)")
     args = ap.parse_args()
 
-    records = read_jsonl(args.jsonl)
-    if not records:
-        print(f"error: no records in {args.jsonl}", file=sys.stderr)
-        sys.exit(1)
-    md = render(records)
+    # A findings document is one (possibly pretty-printed, so multi-line)
+    # JSON object — try whole-file parse before the line-based JSONL path.
+    doc = None
+    try:
+        with open(args.jsonl) as f:
+            doc = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError):
+        pass
+    if isinstance(doc, dict) and "findings" in doc:
+        md = render_analysis(doc)
+        records = [doc]
+    else:
+        records = read_jsonl(args.jsonl)
+        if not records:
+            print(f"error: no records in {args.jsonl}", file=sys.stderr)
+            sys.exit(1)
+        md = render(records)
     if args.out:
         with open(args.out, "w") as f:
             f.write(md)

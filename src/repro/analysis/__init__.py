@@ -1,0 +1,22 @@
+"""Static-analysis subsystem (docs/static_analysis.md).
+
+Two layers over the SPMD hot path:
+
+* **jaxlint** (``repro.analysis.lint`` + ``rules``): AST rules JL101 —
+  JL106 over the Python sources (axis-name constants, host syncs,
+  tracer isinstance, nondeterminism, Pallas debris / unmasked dynamic
+  loads) plus the PAL301 BlockSpec grid-bounds checker
+  (``pallas_check``).
+* **sanitizer** (``repro.analysis.sanitizer``): compiles the small-
+  config train/decode steps and asserts program-level invariants
+  SAN201 — SAN205 (no host transfers, no f64, bf16 actually on the
+  wire, donation aliased, deterministic lowering).
+
+CLI: ``python -m repro.analysis`` (``--explain CODE``, ``--json OUT``).
+This module stays import-light; jax loads only when a check needs it.
+"""
+
+from repro.analysis.decorators import host_sync_allowed
+from repro.analysis.findings import AnalysisResult, Finding
+
+__all__ = ["AnalysisResult", "Finding", "host_sync_allowed"]

@@ -1,0 +1,103 @@
+"""CLI: ``python -m repro.analysis``.
+
+Default run = both layers: jaxlint (AST rules + the PAL301 kernel
+bounds battery) repo-wide, then the compiled-program sanitizer on the
+(1,8) and (2,4) train steps and the serve decode step. Exit 0 iff no
+findings survive suppressions.
+
+  python -m repro.analysis                    # everything
+  python -m repro.analysis --lint-only src/repro/train/step.py
+  python -m repro.analysis --sanitize-only
+  python -m repro.analysis --explain JL101
+  python -m repro.analysis --json findings.json   # CI artifact; render
+                                                  # with scripts/report.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# The sanitizer needs the 8-virtual-device CPU topology; the flag must
+# land before jax initializes its backends (so: before any repro import
+# that pulls jax in).
+_DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+if _DEVICE_FLAG.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _DEVICE_FLAG).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxlint (AST) + compiled-program sanitizer")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: repo roots)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="AST rules + kernel bounds battery only")
+    ap.add_argument("--sanitize-only", action="store_true",
+                    help="compiled-program sanitizer only")
+    ap.add_argument("--no-kernel-check", action="store_true",
+                    help="skip the PAL301 Pallas bounds battery")
+    ap.add_argument("--json", dest="json_out", metavar="PATH",
+                    help="write the machine-readable findings document")
+    ap.add_argument("--explain", metavar="CODE",
+                    help="print the rule doc for CODE and exit")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        from repro.analysis.rules import explain
+        try:
+            print(explain(args.explain))
+        except KeyError as e:
+            print(e.args[0], file=sys.stderr)
+            return 2
+        return 0
+
+    from repro.analysis.findings import AnalysisResult
+    result = AnalysisResult()
+
+    if not args.sanitize_only:
+        from pathlib import Path
+
+        from repro.analysis.lint import discover_files, run_lint
+        paths = None
+        if args.paths:
+            paths = []
+            for p in args.paths:
+                paths += discover_files(Path(p))
+        result.extend(run_lint(paths))
+        if not args.no_kernel_check:
+            from repro.analysis.pallas_check import check_repo_kernels
+            kf, n_kernels = check_repo_kernels()
+            result.findings += kf
+            result.checked["kernels"] = n_kernels
+
+    if not args.lint_only and not args.paths:
+        from repro.analysis.sanitizer import run_sanitizer
+        result.extend(run_sanitizer())
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(result.to_json())
+
+    for f in result.findings:
+        print(f)
+    n_sup = len(result.suppressed)
+    checked = ", ".join(f"{v} {k}" for k, v in sorted(
+        result.checked.items()))
+    if result.ok:
+        print(f"OK: 0 findings ({checked}"
+              + (f"; {n_sup} suppressed" if n_sup else "") + ")")
+        return 0
+    counts = ", ".join(f"{k}×{v}" for k, v in sorted(
+        result.counts().items()))
+    print(f"FAIL: {len(result.findings)} finding(s) [{counts}] "
+          f"({checked})", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

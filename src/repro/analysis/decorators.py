@@ -1,0 +1,24 @@
+"""Allowlist markers the AST lint recognizes.
+
+Import-light on purpose: hot-path modules (``repro.obs``) import this at
+module load, so it must not pull in jax.
+"""
+
+from __future__ import annotations
+
+HOST_SYNC_ATTR = "__jaxlint_host_sync_allowed__"
+
+
+def host_sync_allowed(fn):
+    """Mark a function as a *deliberate* host-sync site (JL102 exempt).
+
+    The only legitimate holders are the observability fencing helpers
+    (``repro.obs.metrics``): they exist to synchronize on device values so
+    phase walls attribute async-dispatched work to the right phase
+    (docs/observability.md). The lint recognizes the decorator *textually*
+    (any ``@host_sync_allowed`` on the enclosing ``def``), so applying it
+    is reviewable in the diff; the runtime marker attribute is set too so
+    tooling can discover allowed sites by import.
+    """
+    setattr(fn, HOST_SYNC_ATTR, True)
+    return fn

@@ -1,0 +1,76 @@
+"""Finding records shared by both analysis layers.
+
+A :class:`Finding` is one violation — from the AST lint (``JL*``/``PAL*``
+codes, anchored to a source line) or from the compiled-program sanitizer
+(``SAN*`` codes, anchored to a lowered/compiled program). Both layers emit
+the same machine-readable shape so the CI ``analysis`` job can upload one
+JSON artifact and ``scripts/report.py`` can render either kind.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class Finding:
+    """One violation.
+
+    ``path`` is the offending file (AST rules) or a program label like
+    ``train_step[dp=2,sp=4]`` (sanitizer). ``line`` is 1-based; 0 means
+    "whole program". ``source`` carries the offending source line or HLO
+    snippet for the report.
+    """
+
+    code: str
+    path: str
+    line: int
+    message: str
+    col: int = 0
+    source: str = ""
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def __str__(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.code} {self.message}"
+
+
+@dataclass
+class AnalysisResult:
+    """Everything one analysis run produced: surviving findings, what was
+    suppressed (and by which mechanism), and what was checked — the JSON
+    document the CI job archives."""
+
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[Finding] = field(default_factory=list)
+    checked: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.code] = out.get(f.code, 0) + 1
+        return out
+
+    def extend(self, other: "AnalysisResult") -> None:
+        self.findings.extend(other.findings)
+        self.suppressed.extend(other.suppressed)
+        for k, v in other.checked.items():
+            self.checked[k] = self.checked.get(k, 0) + v
+
+    def to_dict(self) -> dict:
+        return {"ok": self.ok,
+                "counts": self.counts(),
+                "checked": dict(self.checked),
+                "findings": [f.to_dict() for f in self.findings],
+                "suppressed": [f.to_dict() for f in self.suppressed]}
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), indent=2, **kw)

@@ -1,0 +1,220 @@
+"""PAL301: grid-bounds checking of Pallas ``BlockSpec`` index maps.
+
+Every ``pallas_call`` BlockSpec index map must send every grid point to a
+block index inside the operand's block grid — ``0 <= idx[d] <
+ceil(shape[d] / block[d])``. Out-of-range maps read a neighbor's blocks
+(or clamp silently on TPU): the bug class the PR-3 backward-band fixes
+removed by hand, now enforced.
+
+Mechanism: :func:`checking` monkeypatches ``pl.pallas_call`` with a
+wrapper that, instead of binding the Pallas primitive, (1) evaluates
+every in/out BlockSpec's ``index_map`` at every grid point with concrete
+Python ints — the repo's maps are pure index arithmetic (``jnp.clip`` on
+concrete ints yields concrete arrays even under tracing), so bounds are
+decidable without running the kernel — and (2) returns zeros of
+``out_shape``. Drive the kernel entry points under ``jax.eval_shape``
+(:func:`check_repo_kernels` covers the in-tree battery: chunk fwd/bwd,
+flash fwd/bwd across causal/window/offset variants, decode); nothing is
+compiled or executed.
+
+Index maps that close over *traced* values (none in-tree today) are
+skipped per grid point, not failed: the checker only asserts what is
+statically decidable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import itertools
+import math
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+
+_MAX_GRID_POINTS = 8192
+
+
+def _block_counts(shape, block_shape):
+    return tuple(
+        1 if bs is None else math.ceil(dim / bs)
+        for dim, bs in zip(shape, block_shape))
+
+
+def _check_spec(name, kind, i, spec, shape, grid, findings: List[Finding]):
+    block_shape = getattr(spec, "block_shape", None)
+    index_map = getattr(spec, "index_map", None)
+    if spec is None or block_shape is None or index_map is None:
+        return
+    if len(block_shape) != len(shape):
+        findings.append(Finding(
+            code="PAL301", path=name, line=0,
+            message=f"{kind}[{i}]: block_shape rank {len(block_shape)} != "
+                    f"operand rank {len(shape)} (shape {tuple(shape)})"))
+        return
+    nblocks = _block_counts(shape, block_shape)
+    points = itertools.product(*[range(g) for g in grid])
+    for pt in itertools.islice(points, _MAX_GRID_POINTS):
+        try:
+            idx = index_map(*pt)
+        except Exception as e:      # arity mismatch, bad arithmetic
+            findings.append(Finding(
+                code="PAL301", path=name, line=0,
+                message=f"{kind}[{i}]: index_map raised at grid point "
+                        f"{pt}: {type(e).__name__}: {e}"))
+            return
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        if len(idx) != len(block_shape):
+            findings.append(Finding(
+                code="PAL301", path=name, line=0,
+                message=f"{kind}[{i}]: index_map returned {len(idx)} "
+                        f"indices for rank-{len(block_shape)} blocks"))
+            return
+        for d, (v, nb) in enumerate(zip(idx, nblocks)):
+            try:
+                vi = int(v)
+            except Exception:       # traced index — not decidable here
+                continue
+            if not 0 <= vi < nb:
+                findings.append(Finding(
+                    code="PAL301", path=name, line=0,
+                    message=f"{kind}[{i}] dim {d}: index_map{pt} -> "
+                            f"{vi}, outside [0, {nb}) "
+                            f"(shape {tuple(shape)}, block "
+                            f"{tuple(block_shape)})"))
+                return              # one finding per spec is enough
+
+
+def _as_list(x):
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+@contextlib.contextmanager
+def checking(findings: List[Finding]):
+    """Patch ``pl.pallas_call`` to bounds-check instead of binding."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    real = pl.pallas_call
+
+    def fake_pallas_call(kernel, *call_args, grid=None, in_specs=None,
+                         out_specs=None, out_shape=None, **kw):
+        name = kw.get("name") or getattr(kernel, "__name__", "<kernel>")
+        gridt = (grid,) if isinstance(grid, int) else tuple(grid or ())
+
+        def runner(*operands):
+            for i, (spec, op) in enumerate(
+                    zip(_as_list(in_specs), operands)):
+                _check_spec(name, "in_specs", i, spec, op.shape, gridt,
+                            findings)
+            shapes = _as_list(out_shape)
+            for i, (spec, sds) in enumerate(
+                    zip(_as_list(out_specs), shapes)):
+                _check_spec(name, "out_specs", i, spec, sds.shape, gridt,
+                            findings)
+            outs = [jnp.zeros(s.shape, s.dtype) for s in shapes]
+            if out_shape is None or isinstance(out_shape, (list, tuple)):
+                return outs
+            return outs[0]
+
+        return runner
+
+    pl.pallas_call = fake_pallas_call
+    try:
+        yield
+    finally:
+        pl.pallas_call = real
+
+
+def check_fn(fn, *args, name: Optional[str] = None) -> List[Finding]:
+    """Bounds-check every pallas_call reached by ``jax.eval_shape(fn,
+    *args)``. Clears jit caches first so already-traced entry points are
+    re-traced through the patch."""
+    import jax
+    findings: List[Finding] = []
+    jax.clear_caches()
+    with checking(findings):
+        try:
+            jax.eval_shape(fn, *args)
+        except Exception as e:
+            findings.append(Finding(
+                code="PAL301", path=name or getattr(fn, "__name__", "<fn>"),
+                line=0,
+                message=f"kernel tracing failed under the bounds "
+                        f"checker: {type(e).__name__}: {e}"))
+    jax.clear_caches()
+    return findings
+
+
+def check_repo_kernels():
+    """The in-tree kernel battery: every Pallas kernel's fwd + bwd index
+    maps, across the causal/sliding-window/offset variants. Returns
+    ``(findings, n_entry_points)``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.lasp2_chunk import lasp2_chunk
+    from repro.kernels.lasp2_decode import lasp2_decode_step
+
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    findings: List[Finding] = []
+    n_entries = 0
+
+    # lasp2_chunk: fwd + the two bwd passes (value-and-grad traces both).
+    q = sds((2, 64, 8), f32)
+    v = sds((2, 64, 16), f32)
+    la = sds((2, 64), f32)
+
+    def chunk_loss(q_, k_, v_, la_):
+        o, state, ld = lasp2_chunk(q_, k_, v_, la_, block_size=16)
+        return jnp.sum(o) + jnp.sum(state) + jnp.sum(ld)
+
+    findings += check_fn(jax.grad(chunk_loss, argnums=(0, 1, 2, 3)),
+                         q, q, v, la, name="lasp2_chunk")
+    n_entries += 1
+
+    # flash attention: fwd + bwd over the mask-shape variants.
+    qf = sds((1, 4, 64, 16), f32)
+    kf = sds((1, 2, 128, 16), f32)   # GQA 2:1, sk != sq
+
+    def flash_loss(**kwargs):
+        def loss(q_, k_, v_):
+            return jnp.sum(flash_attention(q_, k_, v_, block_q=32,
+                                           block_k=32, **kwargs))
+        return loss
+
+    variants = {
+        "flash[causal]": dict(causal=True),
+        "flash[causal,q_offset=0]": dict(causal=True, q_offset=0),
+        "flash[window]": dict(causal=True, sliding_window=48),
+        "flash[kv_len]": dict(causal=True, kv_len=100),
+    }
+    for label, kwargs in variants.items():
+        findings += check_fn(
+            jax.grad(flash_loss(**kwargs), argnums=(0, 1, 2)),
+            qf, kf, kf, name=label)
+        n_entries += 1
+
+    # traced q_offset (the LASP-2H SP rank offset): untrimmed band.
+    def flash_traced_offset(q_, k_, v_, off):
+        return jnp.sum(flash_attention(q_, k_, v_, causal=True,
+                                       q_offset=off, block_q=32,
+                                       block_k=32))
+
+    findings += check_fn(
+        jax.grad(flash_traced_offset, argnums=(0, 1, 2)),
+        qf, kf, kf, sds((), jnp.int32), name="flash[traced offset]")
+    n_entries += 1
+
+    # decode step.
+    findings += check_fn(
+        lasp2_decode_step, sds((4, 8), f32), sds((4, 8), f32),
+        sds((4, 16), f32), sds((4,), f32), sds((4, 8, 16), f32),
+        sds((4,), f32), name="lasp2_decode_step")
+    n_entries += 1
+    return findings, n_entries

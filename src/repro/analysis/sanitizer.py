@@ -1,0 +1,265 @@
+"""Layer 2: compiled-program sanitizer (SAN2xx invariants).
+
+Where the AST lint reads source, this layer reads the *programs*: it
+lowers and compiles the small-config train steps ((1,8) and (2,4)
+DP×SP splits of the 8 virtual devices) plus the serve decode step, and
+statically asserts the program-level invariants the HLO collective
+budgets (``repro.comm.budget``) don't cover:
+
+* SAN201 — zero host transfers (no infeed/outfeed/host custom-calls);
+* SAN202 — zero f64 (or c128) ops;
+* SAN203 — ``comm_dtype=bf16`` exchanges actually carry bf16 on the
+  wire, read from the LOWERED StableHLO (XLA:CPU float normalization
+  upcasts bf16 collectives to f32 in compiled HLO, so the compiled text
+  cannot prove this);
+* SAN204 — donated buffers truly aliased (non-empty input_output_alias
+  table: the train state under ``donate_argnums=(0,)``, the decode
+  cache under ``donate_argnums=(2,)``);
+* SAN205 — deterministic lowering: two independent lowerings produce
+  the identical collective fingerprint (op, dtype, shape, groups).
+
+``sanitize_text`` is the pure-text core (unit-testable against crafted
+HLO); the ``sanitize_*`` drivers build the real programs. The train
+drivers need the 8-virtual-device CPU topology — the CLI
+(``python -m repro.analysis``) sets ``XLA_FLAGS`` before importing jax.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Callable, List, Optional
+
+from repro.analysis.findings import AnalysisResult, Finding
+
+_HOST_OP_RE = re.compile(r"\b(?:infeed|outfeed)(?:-done|-start)?\(")
+_F64_RE = re.compile(r"\b(f64|c128)\[")
+
+_WIRE_DTYPE = {"bf16": "bf16", "fp32": "f32"}
+
+
+# ---------------------------------------------------------------------------
+# Pure-text checks (unit-testable on crafted HLO/StableHLO).
+# ---------------------------------------------------------------------------
+
+def sanitize_text(label: str, *, compiled_text: Optional[str] = None,
+                  lowered_text: Optional[str] = None, mesh=None,
+                  comm_dtype: Optional[str] = None,
+                  expect_donation: bool = False) -> List[Finding]:
+    findings: List[Finding] = []
+    if compiled_text is not None:
+        findings += _check_host_transfers(label, compiled_text)
+        findings += _check_f64(label, compiled_text)
+        if expect_donation:
+            findings += _check_donation(label, compiled_text)
+    if lowered_text is not None and mesh is not None and comm_dtype:
+        findings += _check_wire_dtype(label, lowered_text, mesh, comm_dtype)
+    return findings
+
+
+def _check_host_transfers(label: str, compiled_text: str) -> List[Finding]:
+    out = []
+    for i, line in enumerate(compiled_text.splitlines(), start=1):
+        s = line.strip()
+        what = None
+        if _HOST_OP_RE.search(s):
+            what = "infeed/outfeed"
+        elif "is_host_transfer=true" in s:
+            what = "host-transfer send/recv"
+        elif "custom-call" in s and "host" in s.lower():
+            what = "host custom-call"
+        if what:
+            out.append(Finding(
+                code="SAN201", path=label, line=i,
+                message=f"{what} in compiled program — a device<->host "
+                        f"round trip inside the step",
+                source=s[:160]))
+    return out
+
+
+def _check_f64(label: str, compiled_text: str) -> List[Finding]:
+    out = []
+    for i, line in enumerate(compiled_text.splitlines(), start=1):
+        m = _F64_RE.search(line)
+        if m and "metadata" not in line[:m.start()]:
+            out.append(Finding(
+                code="SAN202", path=label, line=i,
+                message=f"{m.group(1)} buffer in compiled program — "
+                        f"accidental double-precision promotion",
+                source=line.strip()[:160]))
+            if len(out) >= 5:       # one is a failure; don't spam
+                break
+    return out
+
+
+def _check_donation(label: str, compiled_text: str) -> List[Finding]:
+    from repro.launch.hlo_analysis import alias_entries
+    n = alias_entries(compiled_text)
+    if n == 0:
+        return [Finding(
+            code="SAN204", path=label, line=0,
+            message="input_output_alias table is empty — the donated "
+                    "buffers (donate_argnums) silently degraded to "
+                    "copies; peak memory doubles for the donated state")]
+    return []
+
+
+def _check_wire_dtype(label: str, lowered_text: str, mesh,
+                      comm_dtype: str) -> List[Finding]:
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import SEQ_AXIS
+
+    want = _WIRE_DTYPE[comm_dtype]
+    out: List[Finding] = []
+    n_seq_exchanges = 0
+    for c in H.parse_stablehlo_collectives(lowered_text):
+        if c.op not in ("all-gather", "reduce-scatter") or c.groups is None:
+            continue
+        axes = H.group_axes([list(g) for g in c.groups], mesh)
+        if axes != (SEQ_AXIS,):
+            continue        # ZeRO-1 data gather / grad reduce: fp32 by
+            # design, not part of the comm_dtype contract
+        n_seq_exchanges += 1
+        if c.dtype != want:
+            out.append(Finding(
+                code="SAN203", path=label, line=0,
+                message=f"comm_dtype={comm_dtype}: {c.op} over the "
+                        f"sequence axis carries {c.dtype} (shape "
+                        f"{c.shape}) — expected {want} on the wire",
+                source=f"{c.op} {c.dtype}{list(c.shape)} "
+                       f"groups={c.groups}"))
+    if mesh.shape.get(SEQ_AXIS, 1) > 1 and n_seq_exchanges == 0:
+        out.append(Finding(
+            code="SAN203", path=label, line=0,
+            message="no sequence-axis state exchange found in the "
+                    "lowered program — the wire-dtype check would be "
+                    "vacuous (did the LASP-2 path compile in?)"))
+    return out
+
+
+def check_determinism(label: str,
+                      lower_once: Callable[[], str]) -> List[Finding]:
+    """SAN205: two independent lowerings -> identical collective
+    fingerprints."""
+    from repro.launch.hlo_analysis import collective_fingerprint
+    fp1 = collective_fingerprint(lower_once())
+    fp2 = collective_fingerprint(lower_once())
+    if fp1 == fp2:
+        return []
+    diff = next((i for i, (a, b) in enumerate(zip(fp1, fp2)) if a != b),
+                min(len(fp1), len(fp2)))
+    return [Finding(
+        code="SAN205", path=label, line=0,
+        message=f"collective fingerprint drifts between two independent "
+                f"lowerings (first divergence at collective #{diff}: "
+                f"{fp1[diff] if diff < len(fp1) else '<missing>'} vs "
+                f"{fp2[diff] if diff < len(fp2) else '<missing>'}) — "
+                f"nondeterministic trace-time state")]
+
+
+# ---------------------------------------------------------------------------
+# Program builders (real lowerings of the repo's hot-path steps).
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg():
+    from repro.configs import get_smoke
+    return get_smoke("linear-llama3-1b")
+
+
+def _require_devices(n: int):
+    import jax
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"sanitizer needs {n} devices, jax sees {have} — run via "
+            f"`python -m repro.analysis` (it sets XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=8 before importing "
+            f"jax), or export it yourself")
+
+
+def lower_train_step(dp: int, sp: int, *, comm_dtype: str = "bf16",
+                     zero1: bool = True, batch: int = 8, seq: int = 64):
+    """Lower (not compile) one 2D DP×SP smoke train step; returns
+    ``(lowered, mesh)``. Fresh closures per call, so calling twice gives
+    the two independent lowerings SAN205 needs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import RunConfig
+    from repro.launch.mesh import make_training_mesh
+    from repro.sharding.rules import make_plan
+    from repro.train.step import init_state, make_train_step
+
+    _require_devices(dp * sp)
+    cfg = _smoke_cfg()
+    mesh = make_training_mesh(dp, sp)
+    plan = make_plan(mesh, "train", global_batch=batch,
+                     n_kv_heads=cfg.n_kv_heads, comm_dtype=comm_dtype,
+                     zero1=zero1)
+    run = RunConfig(comm_dtype=comm_dtype, zero1=zero1,
+                    dp_degree=dp, sp_degree=sp)
+    state = jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, run, plan))
+    sds = jax.ShapeDtypeStruct
+    batch_sds = {"tokens": sds((1, batch, seq), jnp.int32),
+                 "labels": sds((1, batch, seq), jnp.int32),
+                 "resets": sds((1, batch, seq), jnp.bool_)}
+    step = make_train_step(cfg, run, plan)
+    lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch_sds)
+    return lowered, mesh
+
+
+def lower_decode_step(*, batch: int = 2, max_len: int = 64):
+    """Lower the serve decode step (single device, donated cache) —
+    the same jit the engine builds (``serve/engine.py``)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+    from repro.sharding.rules import local_plan
+
+    cfg = _smoke_cfg()
+    plan = local_plan()
+    params = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, batch, max_len))
+
+    def _decode(p, tok, c):
+        return M.decode_step(p, tok, c, cfg, plan)
+
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(_decode, donate_argnums=(2,)).lower(params, tok, cache)
+
+
+def sanitize_train_step(dp: int, sp: int, *, comm_dtype: str = "bf16",
+                        zero1: bool = True,
+                        determinism: bool = True) -> List[Finding]:
+    label = f"train_step[dp={dp},sp={sp},comm_dtype={comm_dtype}]"
+    lowered, mesh = lower_train_step(dp, sp, comm_dtype=comm_dtype,
+                                     zero1=zero1)
+    compiled_text = lowered.compile().as_text()
+    findings = sanitize_text(
+        label, compiled_text=compiled_text, lowered_text=lowered.as_text(),
+        mesh=mesh, comm_dtype=comm_dtype, expect_donation=True)
+    if determinism:
+        findings += check_determinism(
+            label, lambda: lower_train_step(
+                dp, sp, comm_dtype=comm_dtype, zero1=zero1)[0].as_text())
+    return findings
+
+
+def sanitize_decode_step() -> List[Finding]:
+    lowered = lower_decode_step()
+    return sanitize_text("decode_step[serve]",
+                         compiled_text=lowered.compile().as_text(),
+                         expect_donation=True)
+
+
+def run_sanitizer() -> AnalysisResult:
+    """The CI battery: (1,8) + (2,4) train steps (bf16 wire) and the
+    serve decode step."""
+    result = AnalysisResult()
+    result.findings += sanitize_train_step(1, 8)
+    result.findings += sanitize_train_step(2, 4)
+    result.findings += sanitize_decode_step()
+    result.checked["programs"] = 3
+    return result

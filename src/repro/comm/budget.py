@@ -21,6 +21,7 @@ from typing import Dict, List, Mapping, Optional
 from repro.launch.hlo_analysis import (_COLL_OPS, collective_axis_counts,
                                        collective_counts,
                                        parse_collectives)
+from repro.launch.mesh import DATA_AXIS, SEQ_AXIS
 
 
 @dataclass(frozen=True)
@@ -211,20 +212,20 @@ def train_step_axis_budget(mesh, *, n_sp_layers: int, microbatches: int = 1,
       after the sharded optimizer update).
     """
     nontrivial = tuple(n for n in mesh.axis_names if mesh.shape[n] > 1)
-    dp = mesh.shape.get("data", 1)
-    sp = mesh.shape.get("sequence", 1)
+    dp = mesh.shape.get(DATA_AXIS, 1)
+    sp = mesh.shape.get(SEQ_AXIS, 1)
     counts: Dict[tuple, int] = {}
     if sp > 1 and n_sp_layers:
         per_pass = n_sp_layers * microbatches
         if backward == "faithful":
-            counts[("all-gather", ("sequence",))] = 2 * per_pass
+            counts[("all-gather", (SEQ_AXIS,))] = 2 * per_pass
         else:
-            counts[("all-gather", ("sequence",))] = per_pass
-            counts[("reduce-scatter", ("sequence",))] = per_pass
+            counts[("all-gather", (SEQ_AXIS,))] = per_pass
+            counts[("reduce-scatter", (SEQ_AXIS,))] = per_pass
     counts[("all-reduce", nontrivial)] = 1
     if zero1 and dp > 1:
-        counts[("all-gather", ("data",))] = \
-            counts.get(("all-gather", ("data",)), 0) + 1
+        counts[("all-gather", (DATA_AXIS,))] = \
+            counts.get(("all-gather", (DATA_AXIS,)), 0) + 1
     return AxisBudget(counts, note=f"dp={dp} sp={sp} "
                                    f"layers={n_sp_layers} A={microbatches}")
 

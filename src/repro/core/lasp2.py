@@ -62,6 +62,7 @@ from repro.comm.strategy import get_strategy
 from repro.core.linear_attention import (ChunkOutputs, chunk_summaries,
                                          pick_block, suffix_grad_combine)
 from repro.kernels import ops as _ops
+from repro.launch.mesh import SEQ_AXIS
 
 
 @dataclass(frozen=True)
@@ -83,7 +84,7 @@ class SPConfig:
     """
 
     mesh: Mesh
-    sp_axis: str = "sequence"  # mesh axis the sequence dim is split over
+    sp_axis: str = SEQ_AXIS    # mesh axis the sequence dim is split over
     comm_strategy: str = "allgather"   # allgather | ring | pipelined
     overlap: str = "overlap"           # overlap | none
     comm_dtype: str = "fp32"           # fp32 | bf16 exchange payloads

@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig, RunConfig, SHAPES, ShapeConfig
+from repro.launch.mesh import MODEL_AXIS, POD_AXIS
 from repro.models import model as M
 from repro.sharding.rules import (Parallelism, fit_spec, make_plan,
                                   param_specs)
@@ -163,7 +164,7 @@ def build_cell(arch: str, shape_name: str, mesh: Optional[Mesh], *,
             if plan.sp is not None and not plan.manual_axes:
                 # 1-D SP-mode training: batch on pod only. (The manual 2D
                 # DP×SP plan keeps its "data"-axis dp.)
-                dp = mesh.shape.get("pod", 1)
+                dp = mesh.shape.get(POD_AXIS, 1)
         a = choose_microbatches(shape, dp, target=run.microbatch_tokens)
         run = dataclasses.replace(run, num_microbatches=a)
         bm = shape.global_batch // a
@@ -198,7 +199,7 @@ def build_cell(arch: str, shape_name: str, mesh: Optional[Mesh], *,
         # +14 GiB peak on phi3.5 decode).
         total_b = sum(int(np.prod(l.shape)) * l.dtype.itemsize
                       for l in jax.tree.leaves(params_shapes))
-        tp_size = mesh.shape.get("model", 1)
+        tp_size = mesh.shape.get(MODEL_AXIS, 1)
         if total_b / tp_size <= run.infer_fsdp_budget_gb * 2 ** 30:
             plan.fsdp_axis = None
     pspec = None

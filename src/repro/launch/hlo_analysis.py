@@ -311,3 +311,86 @@ def memory_report(compiled) -> Dict[str, float]:
                        + ma.temp_size_in_bytes
                        - ma.alias_size_in_bytes),
     }
+
+
+# ---------------------------------------------------------------------------
+# Lowered (pre-optimization) StableHLO parsing — the wire-dtype view.
+#
+# XLA:CPU's float normalization UPCASTS bf16 collectives to f32 in the
+# *compiled* HLO (bf16 is storage-only there), so a comm_dtype=bf16
+# assertion must read the LOWERED StableHLO, where the element types the
+# program put on the wire are still visible. Used by the compiled-program
+# sanitizer (repro.analysis.sanitizer, SAN203/SAN205).
+# ---------------------------------------------------------------------------
+
+_STABLEHLO_OPS = ("all_gather", "all_reduce", "reduce_scatter",
+                  "all_to_all", "collective_permute", "collective_broadcast")
+_STABLEHLO_OP_RE = re.compile(
+    r'"stablehlo\.(' + "|".join(_STABLEHLO_OPS) + r')"')
+_STABLEHLO_GROUPS_RE = re.compile(
+    r"replica_groups\s*=\s*dense<(\[\[.*?\]\]|\[?[0-9 ,]*\]?)>", re.S)
+_STABLEHLO_FNTYPE_RE = re.compile(
+    r":\s*\((tensor<[^)]*?)\)\s*->", re.S)
+_TENSOR_RE = re.compile(r"tensor<([0-9x]*)([a-z][a-z0-9]*)>")
+
+
+@dataclass(frozen=True)
+class StableHloCollective:
+    """One collective in lowered StableHLO text, with its wire-visible
+    element type (the thing compiled CPU HLO loses for bf16)."""
+
+    op: str                     # hlo-style name, e.g. "all-gather"
+    dtype: str                  # element type of the first operand
+    shape: tuple                # dims of the first operand
+    groups: Optional[tuple]     # replica groups (device ids), or None
+
+
+def parse_stablehlo_collectives(text: str) -> List[StableHloCollective]:
+    """Every collective op in a ``lowered.as_text()`` module, in program
+    order. Region-holding ops (all_reduce/reduce_scatter) print their
+    function type after the region body, so the scan is text-positional,
+    not line-based."""
+    import json
+    out = []
+    for m in _STABLEHLO_OP_RE.finditer(text):
+        tail = text[m.end():]
+        gm = _STABLEHLO_GROUPS_RE.search(tail[:2000])
+        groups = None
+        if gm:
+            raw = gm.group(1)
+            if not raw.startswith("[["):
+                raw = f"[[{raw.strip('[]')}]]"
+            groups = tuple(tuple(g) for g in json.loads(raw))
+        fm = _STABLEHLO_FNTYPE_RE.search(tail)
+        dtype, shape = "?", ()
+        if fm:
+            tm = _TENSOR_RE.search(fm.group(1))
+            if tm:
+                shape = tuple(int(d) for d in tm.group(1).split("x") if d)
+                dtype = tm.group(2)
+        out.append(StableHloCollective(
+            op=m.group(1).replace("_", "-"), dtype=dtype, shape=shape,
+            groups=groups))
+    return out
+
+
+def collective_fingerprint(text: str) -> List[tuple]:
+    """Order-preserving (op, dtype, shape, groups) sequence of a lowered
+    module — the determinism invariant: two independent lowerings of the
+    same step must produce the identical fingerprint (SAN205)."""
+    return [(c.op, c.dtype, c.shape, c.groups)
+            for c in parse_stablehlo_collectives(text)]
+
+
+def alias_entries(compiled_text: str) -> int:
+    """Number of entries in the compiled module's input/output alias
+    table (``input_output_alias={ {0}: (0, {}, may-alias), ... }``).
+    0 = donation degraded to a copy (SAN204)."""
+    m = re.search(r"input_output_alias=\{", compiled_text)
+    if not m:
+        return 0
+    depth, i = 1, m.end()
+    while i < len(compiled_text) and depth:
+        depth += {"{": 1, "}": -1}.get(compiled_text[i], 0)
+        i += 1
+    return compiled_text[m.end():i].count("alias")

@@ -119,8 +119,8 @@ def main():
                          comm_overlap=run.comm_overlap,
                          comm_dtype=run.comm_dtype, zero1=run.zero1)
     elif args.multi_device and len(jax.devices()) > 1:
-        from repro.launch.mesh import auto_axis_types
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",),
+        from repro.launch.mesh import DATA_AXIS, auto_axis_types
+        mesh = jax.make_mesh((len(jax.devices()),), (DATA_AXIS,),
                              **auto_axis_types(1))
         plan = make_plan(mesh, "train", global_batch=args.batch,
                          n_kv_heads=cfg.n_kv_heads,

@@ -38,6 +38,8 @@ import time
 from contextlib import contextmanager
 from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
 
+from repro.analysis.decorators import host_sync_allowed
+
 
 # ---------------------------------------------------------------------------
 # Sinks.
@@ -293,6 +295,7 @@ class Metrics:
 # Phase timing.
 # ---------------------------------------------------------------------------
 
+@host_sync_allowed
 def block_until_ready(x):
     """Block on every jax array in a pytree (no-op for host values)."""
     import jax
@@ -313,6 +316,7 @@ class Fence:
         self.value = x
         return x
 
+    @host_sync_allowed
     def block(self):
         if self.value is not None:
             block_until_ready(self.value)

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.launch.mesh import POD_AXIS
+
 
 def _compress_psum_leaf(g, err, axis):
     gf = g.astype(jnp.float32) + err
@@ -31,7 +33,7 @@ def _compress_psum_leaf(g, err, axis):
     return mean.astype(g.dtype), new_err
 
 
-def compress_sync_tree(grads, err_buf, *, pod_axis="pod"):
+def compress_sync_tree(grads, err_buf, *, pod_axis=POD_AXIS):
     """Mean gradient trees across pods with int8 error-feedback compression.
 
     Must be called *inside* a ``shard_map`` whose manual axes include

@@ -26,7 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.lasp2 import SPConfig
-from repro.launch.mesh import DATA_AXIS, POD_AXIS, SEQ_AXIS
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS, SEQ_AXIS
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -72,9 +72,9 @@ class Parallelism:
     rules: dict = field(default_factory=dict)
     sp: Optional[SPConfig] = None
     backend: Optional[str] = None          # kernels backend override
-    fsdp_axis: Optional[str] = "data"
-    tp_axis: Optional[str] = "model"
-    dp_axes: tuple = ("pod", "data")
+    fsdp_axis: Optional[str] = DATA_AXIS
+    tp_axis: Optional[str] = MODEL_AXIS
+    dp_axes: tuple = (POD_AXIS, DATA_AXIS)
     decode_cache_axis: Optional[str] = None  # shard KV-cache seq dim here
     banded_windows: bool = True    # banded sliding-window attention (§Perf)
     # 2D DP×SP training (docs/parallelism.md): when set, the whole train
@@ -262,26 +262,27 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
             plan.zero1_axis = dp_ax
         return plan
 
-    dp = ("pod", "data") if has_pod else ("data",)
-    tp = "model" if "model" in axes else None
+    dp = (POD_AXIS, DATA_AXIS) if has_pod else (DATA_AXIS,)
+    tp = MODEL_AXIS if MODEL_AXIS in axes else None
     plan = Parallelism(mesh=mesh, backend=backend,
-                       fsdp_axis="data" if "data" in axes else None,
+                       fsdp_axis=DATA_AXIS if DATA_AXIS in axes else None,
                        tp_axis=tp, dp_axes=dp)
 
     # The SP axis: the canonical SEQ_AXIS when the mesh names one,
-    # otherwise "data" (the production inference meshes, where the data
-    # axis does double duty for prefill SP).
-    sp_ax = seq_ax or "data"
+    # otherwise DATA_AXIS (the production inference meshes, where the
+    # data axis does double duty for prefill SP).
+    sp_ax = seq_ax or DATA_AXIS
     sp_size = mesh.shape.get(sp_ax, 1)
-    tp_size = mesh.shape.get("model", 1) if tp else 1
+    tp_size = mesh.shape.get(MODEL_AXIS, 1) if tp else 1
 
     if (shape_kind == "prefill" and tp is not None and n_heads is not None
             and n_heads % tp_size != 0 and global_batch % tp_size == 0
             and params_bytes is not None
             and params_bytes <= 6 * 2 ** 30):
-        plan.tp_axis = None          # weights replicated on "model"
-        plan.fsdp_axis = "data" if "data" in axes else None
-        plan.rules = {"batch": ("pod", "model") if has_pod else "model",
+        plan.tp_axis = None          # weights replicated on the TP axis
+        plan.fsdp_axis = DATA_AXIS if DATA_AXIS in axes else None
+        plan.rules = {"batch": (POD_AXIS, MODEL_AXIS) if has_pod
+                      else MODEL_AXIS,
                       "seq": sp_ax, "residual_seq": sp_ax,
                       "heads": None, "kv_heads": None,
                       "ff": None, "vocab": None, "experts": None,
@@ -304,7 +305,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
         # around every projection, not just attention. Not enabled.
         # batch not divisible by full dp → fall back to sequence parallelism
         if global_batch % _axis_size(mesh, dp) != 0:
-            plan.rules.update({"batch": "pod" if has_pod else None,
+            plan.rules.update({"batch": POD_AXIS if has_pod else None,
                                "seq": sp_ax})
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
                                comm_strategy=comm_strategy,
@@ -312,7 +313,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
                                comm_dtype=comm_dtype,
                                kernel_backend=backend)
     elif shape_kind == "prefill":
-        plan.rules = {"batch": "pod" if has_pod else None, "seq": sp_ax,
+        plan.rules = {"batch": POD_AXIS if has_pod else None, "seq": sp_ax,
                       "residual_seq": sp_ax,
                       "heads": tp, "kv_heads": tp, "ff": tp, "vocab": tp,
                       "experts": tp, "cache_seq": sp_ax}

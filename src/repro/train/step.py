@@ -38,6 +38,7 @@ from repro.core.compat import shard_map as _shard_map
 
 from repro.comm import primitives as comm_primitives
 from repro.configs.base import ModelConfig, RunConfig
+from repro.launch.mesh import POD_AXIS
 from repro.models import model as M
 from repro.optim import adamw
 from repro.optim.compression import compress_sync_tree
@@ -304,19 +305,19 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, plan: Parallelism):
             compute_params = params
 
         if run.grad_compression and plan.mesh is not None \
-                and "pod" in plan.mesh.axis_names:
+                and POD_AXIS in plan.mesh.axis_names:
             # per-pod local grads → int8 error-feedback cross-pod sync
             def body(params_, batch_, err_):
                 g, ce = _accum_grads(loss_fn, params_, batch_,
                                      run.scan_unroll, plan)
-                g, new_err = compress_sync_tree(g, err_, pod_axis="pod")
-                return g, jax.lax.pmean(ce, "pod"), new_err
+                g, new_err = compress_sync_tree(g, err_, pod_axis=POD_AXIS)
+                return g, jax.lax.pmean(ce, POD_AXIS), new_err
 
-            nb = jax.tree.map(lambda x: P(None, "pod"), batch)
+            nb = jax.tree.map(lambda x: P(None, POD_AXIS), batch)
             grads, ce, new_err = _shard_map(
                 body, mesh=plan.mesh,
                 in_specs=(P(), nb, P()), out_specs=(P(), P(), P()),
-                axis_names={"pod"}, check_vma=False)(
+                axis_names={POD_AXIS}, check_vma=False)(
                     compute_params, batch, state["err"])
         else:
             grads, ce = _accum_grads(loss_fn, compute_params, batch,

@@ -388,13 +388,13 @@ def _():
     e0 = jnp.zeros((2, 64, 64))
 
     def body(g_, e_):
-        s, e = compress_sync_tree(g_[0], e_[0], pod_axis="pod")
+        s, e = compress_sync_tree(g_[0], e_[0], pod_axis=POD_AXIS)
         return s, e[None]
 
     synced, err = jax.jit(_shard_map(
-        body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-        out_specs=(P(), P("pod")), axis_names={"pod"}, check_vma=False))(
-            gs, e0)
+        body, mesh=mesh, in_specs=(P(POD_AXIS), P(POD_AXIS)),
+        out_specs=(P(), P(POD_AXIS)), axis_names={POD_AXIS},
+        check_vma=False))(gs, e0)
     exact = jnp.mean(gs, axis=0)
     rel = float(jnp.max(jnp.abs(synced - exact))
                 / (jnp.max(jnp.abs(exact)) + 1e-12))
@@ -655,6 +655,18 @@ def _():
                 "expected_collective_bytes", "hlo_collective_bytes",
                 "straggler"} <= set(r)
         assert r["tokens"] == 8 * 64
+
+
+@check(f"({DP},{SP}) compiled-program sanitizer: SAN201-205 clean",
+       section="2d")
+def _():
+    """The static-analysis layer-2 invariants (docs/static_analysis.md)
+    hold on this leg's mesh split: no host transfers, no f64, bf16 on
+    the sequence-axis wire, donation aliased, deterministic lowering."""
+    from repro.analysis.sanitizer import sanitize_train_step
+
+    findings = sanitize_train_step(DP, SP, comm_dtype="bf16")
+    assert not findings, "\n".join(str(f) for f in findings)
 
 
 if __name__ == "__main__":

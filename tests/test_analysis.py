@@ -1,0 +1,433 @@
+"""Seeded-violation battery for the static-analysis subsystem.
+
+Every jaxlint rule gets a fixture carrying its bug pattern (must flag)
+plus a clean twin (must pass); the sanitizer's pure-text checks get
+crafted HLO/StableHLO with injected regressions (fp32 on the bf16 wire,
+host transfers, f64, dropped donation, fingerprint drift). The repo-wide
+assertions at the bottom are the PR's contract: zero findings, zero
+suppressions (docs/static_analysis.md).
+"""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.findings import AnalysisResult, Finding
+from repro.analysis.lint import (discover_files, lint_file,
+                                 load_suppressions, run_lint)
+from repro.analysis.rules import explain
+from repro.analysis.sanitizer import check_determinism, sanitize_text
+from repro.launch.mesh import DATA_AXIS, SEQ_AXIS
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _lint(text, codes, **kw):
+    return lint_file(Path("fx.py"), text=text, codes=set(codes), **kw)
+
+
+def _codes(findings):
+    return [f.code for f in findings]
+
+
+# --- JL101: raw axis-name literals -----------------------------------------
+
+def test_jl101_flags_axis_literals():
+    bad = '''
+def f(mesh):
+    return mesh.shape.get("data", 1)
+
+spec = P("sequence", None)
+names = {"model", "pod"}
+'''
+    assert _codes(_lint(bad, ["JL101"])) == ["JL101"] * 4
+
+
+def test_jl101_clean_twin_passes():
+    clean = '''
+from repro.launch.mesh import DATA_AXIS, SEQ_AXIS
+
+def f(mesh):
+    return mesh.shape.get(DATA_AXIS, 1)
+
+spec = P(SEQ_AXIS, None)
+'''
+    assert _lint(clean, ["JL101"]) == []
+
+
+def test_jl101_denied_contexts_not_flagged():
+    # the axis words as decay kinds / phase-timer labels are legitimate
+    denied = '''
+if cfg.linear_attn.decay == "data":
+    pass
+cfg2 = LinearAttnConfig("data", kind="sequence")
+with timer.phase("sequence"):
+    pass
+g(decay="model")
+'''
+    assert _lint(denied, ["JL101"]) == []
+
+
+# --- JL102: host syncs in traced hot-path modules --------------------------
+
+_JL102_BAD = '''
+import jax
+import numpy as np
+
+def f(x):
+    print(x)
+    jax.block_until_ready(x)
+    jax.device_get(x)
+    np.asarray(x)
+    return x.item()
+'''
+
+
+def test_jl102_flags_host_syncs_in_scope():
+    assert _codes(_lint(_JL102_BAD, ["JL102"], sync_scope=True)) \
+        == ["JL102"] * 5
+
+
+def test_jl102_out_of_scope_silent():
+    # host-side drivers own their sync points — rule scoped off
+    assert _lint(_JL102_BAD, ["JL102"], sync_scope=False) == []
+
+
+def test_jl102_decorator_exempts():
+    fenced = '''
+import jax
+from repro.analysis.decorators import host_sync_allowed
+
+@host_sync_allowed
+def fence(x):
+    return jax.block_until_ready(x)
+'''
+    assert _lint(fenced, ["JL102"], sync_scope=True) == []
+
+
+# --- JL103: Tracer isinstance ----------------------------------------------
+
+def test_jl103_flags_tracer_isinstance():
+    bad = '''
+import jax
+
+def f(x):
+    if isinstance(x, jax.core.Tracer):
+        return 1
+    return isinstance(x, Tracer)
+'''
+    assert _codes(_lint(bad, ["JL103"])) == ["JL103"] * 2
+
+
+def test_jl103_clean_twin_passes():
+    clean = '''
+from repro.core.compat import is_tracer
+
+def f(x):
+    return is_tracer(x) or isinstance(x, float)
+'''
+    assert _lint(clean, ["JL103"]) == []
+
+
+# --- JL104: nondeterminism in traced code ----------------------------------
+
+def test_jl104_flags_nondeterminism_in_scope():
+    bad = '''
+import time
+from random import shuffle
+import numpy as np
+
+def f(x):
+    return x + np.random.normal() + time.time()
+'''
+    # import time, from random, np.random attribute (time.time() is
+    # reached via the import finding; the attribute walk only matches
+    # numpy aliases)
+    assert _codes(_lint(bad, ["JL104"], det_scope=True)) == ["JL104"] * 3
+
+
+def test_jl104_clean_twin_passes():
+    clean = '''
+import jax
+
+def f(key, x):
+    return x + jax.random.normal(key, x.shape)
+'''
+    assert _lint(clean, ["JL104"], det_scope=True) == []
+    # out of scope: host drivers may use clocks
+    assert _lint("import time\n", ["JL104"], det_scope=False) == []
+
+
+# --- JL105: Pallas debug debris --------------------------------------------
+
+def test_jl105_flags_debris():
+    bad = '''
+from jax.experimental import pallas as pl
+
+def kern(x_ref, o_ref):
+    pl.debug_print("x = {}", x_ref[...])
+    o_ref[...] = x_ref[...]
+
+def run(x):
+    return pl.pallas_call(kern, out_shape=x, interpret=True)(x)
+'''
+    assert _codes(_lint(bad, ["JL105"])) == ["JL105"] * 2
+
+
+def test_jl105_interpret_via_knob_passes():
+    clean = '''
+from jax.experimental import pallas as pl
+
+def run(x, interpret):
+    return pl.pallas_call(kern, out_shape=x, interpret=interpret)(x)
+'''
+    assert _lint(clean, ["JL105"]) == []
+
+
+# --- JL106: unmasked dynamic pl.load/store ---------------------------------
+
+def test_jl106_flags_unmasked_dynamic():
+    bad = '''
+from jax.experimental import pallas as pl
+
+def kern(ref, o_ref, i):
+    x = pl.load(ref, (pl.ds(i, 4),))
+    pl.store(o_ref, (pl.ds(i, 4),), x)
+'''
+    assert _codes(_lint(bad, ["JL106"])) == ["JL106"] * 2
+
+
+def test_jl106_masked_twin_passes():
+    clean = '''
+from jax.experimental import pallas as pl
+
+def kern(ref, o_ref, i, m):
+    x = pl.load(ref, (pl.ds(i, 4),), mask=m, other=0.0)
+    pl.store(o_ref, (pl.ds(i, 4),), x, mask=m)
+    y = pl.load(ref, (slice(None),))          # static: no mask needed
+'''
+    assert _lint(clean, ["JL106"]) == []
+
+
+# --- suppression mechanisms -------------------------------------------------
+
+def test_inline_disable_routes_to_suppressed(tmp_path):
+    p = tmp_path / "fx.py"
+    p.write_text('ax = "sequence"  # jaxlint: disable=JL101\n')
+    res = run_lint([p], suppressions=[])
+    assert res.findings == [] and _codes(res.suppressed) == ["JL101"]
+
+
+def test_suppression_file_routes_to_suppressed(tmp_path):
+    p = tmp_path / "fx.py"
+    p.write_text('ax = "sequence"\n')
+    sup = tmp_path / "suppressions.txt"
+    sup.write_text("# comment\nfx.py JL101\n")
+    res = run_lint([p], suppressions=load_suppressions(sup))
+    assert res.findings == [] and _codes(res.suppressed) == ["JL101"]
+    # a different code still surfaces
+    res2 = run_lint([p], suppressions=[("fx.py", "JL102")])
+    assert _codes(res2.findings) == ["JL101"]
+
+
+def test_bad_suppression_line_raises(tmp_path):
+    sup = tmp_path / "suppressions.txt"
+    sup.write_text("fx.py JL101 extra-token\n")
+    with pytest.raises(ValueError, match="bad suppression line"):
+        load_suppressions(sup)
+
+
+def test_explain_known_and_unknown():
+    assert "axis-name" in explain("jl101")
+    with pytest.raises(KeyError, match="unknown rule code"):
+        explain("JL999")
+
+
+# --- repo-wide contract -----------------------------------------------------
+
+def test_repo_lint_clean_and_suppressions_empty():
+    """The PR's acceptance bar: zero surviving findings repo-wide AND an
+    empty suppression file (nothing grandfathered, hot path or not)."""
+    res = run_lint()
+    assert res.ok, "\n".join(str(f) for f in res.findings)
+    assert load_suppressions() == []
+    assert res.suppressed == []
+
+
+def test_discovery_skips_pycache():
+    files = discover_files(ROOT)
+    assert files, "discovery found nothing"
+    assert not [p for p in files if "__pycache__" in p.parts]
+
+
+# --- PAL301: Pallas index-map grid bounds -----------------------------------
+
+def _pallas_runner(idx_fn):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def run(x):
+        return pl.pallas_call(
+            kern, grid=(4,),
+            in_specs=[pl.BlockSpec((8,), idx_fn)],
+            out_specs=pl.BlockSpec((8,), lambda i: i),
+            out_shape=jax.ShapeDtypeStruct((32,), jnp.float32))(x)
+    return run
+
+
+def test_pal301_catches_out_of_bounds_index_map():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.pallas_check import check_fn
+    sds = jax.ShapeDtypeStruct((32,), jnp.float32)
+    bad = check_fn(_pallas_runner(lambda i: i + 1), sds, name="bad")
+    assert _codes(bad) == ["PAL301"] and "outside [0, 4)" in bad[0].message
+    assert check_fn(_pallas_runner(lambda i: i), sds, name="good") == []
+
+
+def test_pal301_repo_kernel_battery_clean():
+    from repro.analysis.pallas_check import check_repo_kernels
+    findings, n_entries = check_repo_kernels()
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert n_entries == 7
+
+
+# --- sanitizer: crafted-program regressions ---------------------------------
+
+_CLEAN_HLO = """\
+HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias) }
+  %x = f32[4]{0} add(f32[4] %a, f32[4] %b)
+  ROOT %t = (f32[4]) tuple(f32[4] %x)
+"""
+
+
+def test_san201_injected_host_transfers_flagged():
+    dirty = _CLEAN_HLO + """\
+  %i = token[] infeed(token[] %tok)
+  %s = (f32[4]) send(f32[4] %x), is_host_transfer=true
+  %c = f32[4] custom-call(f32[4] %x), custom_call_target="HostCallback"
+"""
+    out = sanitize_text("fx", compiled_text=dirty)
+    assert _codes(out) == ["SAN201"] * 3
+    assert sanitize_text("fx", compiled_text=_CLEAN_HLO) == []
+
+
+def test_san202_injected_f64_flagged():
+    dirty = _CLEAN_HLO + "  %d = f64[4]{0} convert(f32[4] %x)\n"
+    out = sanitize_text("fx", compiled_text=dirty)
+    assert _codes(out) == ["SAN202"] and "f64" in out[0].message
+    # f64 inside a metadata attribute is not a program buffer
+    meta = _CLEAN_HLO + \
+        '  %m = f32[4] add(%a, %b), metadata={op_name="f64[cast]"}\n'
+    assert sanitize_text("fx", compiled_text=meta) == []
+
+
+def test_san204_missing_donation_flagged():
+    undonated = _CLEAN_HLO.replace(
+        ", input_output_alias={ {0}: (0, {}, may-alias) }", "")
+    out = sanitize_text("fx", compiled_text=undonated, expect_donation=True)
+    assert _codes(out) == ["SAN204"]
+    assert sanitize_text("fx", compiled_text=_CLEAN_HLO,
+                         expect_donation=True) == []
+
+
+class _FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _FakeMesh:
+    """A (2, 4) (DATA_AXIS, SEQ_AXIS) mesh: device (d, s) = id d*4+s."""
+
+    axis_names = (DATA_AXIS, SEQ_AXIS)
+    shape = {DATA_AXIS: 2, SEQ_AXIS: 4}
+
+    @property
+    def devices(self):
+        return np.array([[_FakeDev(d * 4 + s) for s in range(4)]
+                         for d in range(2)])
+
+
+def _stablehlo(gather_dtype):
+    # a seq-axis state gather (comm_dtype contract) + the ZeRO-1
+    # data-axis param gather (fp32 by design, exempt)
+    return f"""\
+module @jit_step {{
+  func.func public @main(%arg0: tensor<1x4x4x257x{gather_dtype}>) {{
+    %0 = "stablehlo.all_gather"(%arg0) <{{all_gather_dim = 2 : i64,
+      replica_groups = dense<[[0, 1, 2, 3], [4, 5, 6, 7]]> :
+      tensor<2x4xi64>}}> : (tensor<1x4x4x257x{gather_dtype}>) ->
+      tensor<1x4x16x257x{gather_dtype}>
+    %1 = "stablehlo.all_gather"(%arg1) <{{replica_groups =
+      dense<[[0, 4], [1, 5], [2, 6], [3, 7]]> : tensor<4x2xi64>}}> :
+      (tensor<80032xf32>) -> tensor<160064xf32>
+    return
+  }}
+}}
+"""
+
+
+def test_san203_fp32_wire_regression_flagged():
+    out = sanitize_text("fx", lowered_text=_stablehlo("f32"),
+                        mesh=_FakeMesh(), comm_dtype="bf16")
+    assert _codes(out) == ["SAN203"] and "carries f32" in out[0].message
+    # the honest bf16 wire passes; the data-axis f32 gather stays exempt
+    assert sanitize_text("fx", lowered_text=_stablehlo("bf16"),
+                         mesh=_FakeMesh(), comm_dtype="bf16") == []
+    # comm_dtype=fp32 accepts the f32 wire
+    assert sanitize_text("fx", lowered_text=_stablehlo("f32"),
+                         mesh=_FakeMesh(), comm_dtype="fp32") == []
+
+
+def test_san203_vacuous_program_flagged():
+    # sp > 1 but no seq-axis exchange at all: the check must not pass
+    # silently (the LASP-2 path failed to compile in)
+    out = sanitize_text("fx", lowered_text="module @jit_step {}",
+                        mesh=_FakeMesh(), comm_dtype="bf16")
+    assert _codes(out) == ["SAN203"] and "vacuous" in out[0].message
+
+
+def test_san205_fingerprint_drift_flagged():
+    texts = [_stablehlo("bf16"), _stablehlo("f32")]
+    out = check_determinism("fx", lambda: texts.pop(0))
+    assert _codes(out) == ["SAN205"]
+    assert check_determinism("fx", lambda: _stablehlo("bf16")) == []
+
+
+# --- sanitizer: real single-device program ----------------------------------
+
+def test_decode_step_sanitizes_clean():
+    """The serve decode jit (donated cache) passes SAN201/202/204 — runs
+    on the default single device; the 8-device train-step legs run in
+    tests/distributed_checks.py."""
+    from repro.analysis.sanitizer import sanitize_decode_step
+    findings = sanitize_decode_step()
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# --- findings document + report rendering -----------------------------------
+
+def test_findings_json_roundtrip_and_report(tmp_path):
+    import json
+    import subprocess
+    import sys
+
+    res = AnalysisResult(
+        findings=[Finding(code="SAN203", path="train_step[dp=2,sp=4]",
+                          line=0, message="carries f32")],
+        checked={"programs": 3})
+    doc = json.loads(res.to_json())
+    assert doc["ok"] is False and doc["counts"] == {"SAN203": 1}
+    p = tmp_path / "findings.json"
+    p.write_text(res.to_json())
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "report.py"), str(p)],
+        capture_output=True, text=True, check=True)
+    assert "Static-analysis report" in out.stdout
+    assert "**FAIL**" in out.stdout and "SAN203" in out.stdout

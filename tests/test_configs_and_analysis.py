@@ -6,6 +6,7 @@ import pytest
 from repro.configs import ALL_IDS, ARCH_IDS, get_config, get_smoke
 from repro.configs.base import SHAPES
 from repro.launch import hlo_analysis as H
+from repro.launch.mesh import DATA_AXIS, SEQ_AXIS
 
 EXPECT_B = {"codeqwen1.5-7b": 7.2, "qwen1.5-110b": 111, "granite-34b": 34,
             "starcoder2-15b": 15, "hymba-1.5b": 1.5, "mamba2-2.7b": 2.7,
@@ -130,7 +131,7 @@ class _FakeMesh:
     """Stands in for a (2, 4) (data, sequence) mesh: device (d, s) has
     global id d*4 + s (row-major, as make_training_mesh lays out)."""
 
-    axis_names = ("data", "sequence")
+    axis_names = (DATA_AXIS, SEQ_AXIS)
 
     @property
     def devices(self):
@@ -166,21 +167,22 @@ def test_permute_axis_classification():
     # be attributed to the data axis
     mesh = _FakeMesh()
     ring = [[0, 1], [1, 2], [2, 3], [3, 0], [4, 5], [5, 6], [6, 7], [7, 4]]
-    assert H.group_axes(ring, mesh) == ("sequence",)
+    assert H.group_axes(ring, mesh) == (SEQ_AXIS,)
     hlo = ("%cp = f32[4] collective-permute(f32[4] %p), "
            "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}")
     counts = H.collective_axis_counts(hlo, mesh)
-    assert counts == {("collective-permute", ("sequence",)): 1}
+    assert counts == {("collective-permute", (SEQ_AXIS,)): 1}
 
 
 def test_group_axes_classification():
     mesh = _FakeMesh()
-    assert H.group_axes([[0, 1, 2, 3], [4, 5, 6, 7]], mesh) == ("sequence",)
-    assert H.group_axes([[0, 4], [1, 5], [2, 6], [3, 7]], mesh) == ("data",)
+    assert H.group_axes([[0, 1, 2, 3], [4, 5, 6, 7]], mesh) == (SEQ_AXIS,)
+    assert H.group_axes([[0, 4], [1, 5], [2, 6], [3, 7]], mesh) \
+        == (DATA_AXIS,)
     assert H.group_axes([[0, 1, 2, 3, 4, 5, 6, 7]], mesh) \
-        == ("data", "sequence")
+        == (DATA_AXIS, SEQ_AXIS)
     # no replica_groups attribute == every non-trivial axis
-    assert H.group_axes(None, mesh) == ("data", "sequence")
+    assert H.group_axes(None, mesh) == (DATA_AXIS, SEQ_AXIS)
 
 
 def test_collective_axis_counts_end_to_end():
@@ -191,6 +193,6 @@ HloModule m
   %zg = f32[16] all-gather(f32[8] %r), replica_groups={{0,4},{1,5},{2,6},{3,7}}, dimensions={0}
 """
     counts = H.collective_axis_counts(hlo, _FakeMesh())
-    assert counts[("all-gather", ("sequence",))] == 1
-    assert counts[("all-reduce", ("data", "sequence"))] == 1
-    assert counts[("all-gather", ("data",))] == 1
+    assert counts[("all-gather", (SEQ_AXIS,))] == 1
+    assert counts[("all-reduce", (DATA_AXIS, SEQ_AXIS))] == 1
+    assert counts[("all-gather", (DATA_AXIS,))] == 1
