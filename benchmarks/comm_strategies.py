@@ -6,7 +6,11 @@ and off (the A/B the paper's overlap claim rests on), the LASP-1-style
 ring, and the ZeCO-style pipelined ring — plus the LASP-1 baseline layer,
 this bench measures wall-clock (median/p90), reads the CommRecord tape
 (bytes/steps on the wire), counts the compiled HLO collectives, and
-asserts each strategy's collective budget. The sweep carries a
+asserts each strategy's collective budget. A second sweep covers the
+LASP-2H softmax context exchange — K/V AllGather vs the ulysses
+head-parallel All-to-All pair vs the Ring Attention baseline — and
+asserts the ulysses per-device wire bytes beat the K/V gather at the
+MHA head ratio. The sweep carries a
 ``comm_dtype`` column: the allgather strategy is measured with the fp32
 and the bf16 wire (same single collective, half the bytes — the byte
 ceiling is asserted against the dtype-true tape, since XLA-CPU's
@@ -108,6 +112,58 @@ for S in (8192, 32768):
             "hlo_bytes": sum(c.traffic_bytes
                              for c in parse_collectives(hlo, W)),
         })
+
+# --- LASP-2H hybrid context sweep: ulysses vs allgather vs ring -------------
+# The softmax layers' context exchange on the same 8-wide axis: K/V
+# AllGather (Alg. 7), the ulysses head-parallel All-to-All pair, and the
+# Ring Attention baseline. MHA heads (8 = world) so the classic ulysses
+# repartition divides; per-device wire bytes for ulysses are
+# (hq+2·hkv)/w-scaled vs allgather's 2·hkv·(w-1) — the byte win the
+# strategy exists for (docs/communication.md has the GQA caveat).
+from repro.comm.budget import CollectiveBudget, hybrid_context_budget
+from repro.core.baselines import ring_attention
+from repro.core.lasp2h import (allgather_context_attention,
+                               ulysses_context_attention)
+
+Sh, Hq, Hkv, dh = 4096, 8, 8, 64
+ks = jax.random.split(jax.random.PRNGKey(1), 3)
+qh = jax.random.normal(ks[0], (B, Hq, Sh, dh), jnp.bfloat16) * 0.3
+kh = jax.random.normal(ks[1], (B, Hkv, Sh, dh), jnp.bfloat16) * 0.3
+vh = jax.random.normal(ks[2], (B, Hkv, Sh, dh), jnp.bfloat16) * 0.5
+hdims = dict(b=B, hq=Hq, hkv=Hkv, c=Sh // W, dh=dh, compute_itemsize=2)
+hybrid_cases = {
+    "hybrid_allgather":
+        (lambda a, b, c: allgather_context_attention(a, b, c, sp=sp),
+         hybrid_context_budget("allgather", W, sp=1, **hdims), "fp32"),
+    "hybrid_ulysses":
+        (lambda a, b, c: ulysses_context_attention(a, b, c, sp=sp),
+         hybrid_context_budget("ulysses", W, sp=1, **hdims), "fp32"),
+    "hybrid_ring_baseline":
+        (lambda a, b, c: ring_attention(a, b, c, sp=sp),
+         # the K and V rotation ops of the scanned ring (W-1 sequential
+         # steps each on the tape)
+         CollectiveBudget({"collective-permute": 2}), "fp32"),
+}
+hbytes = {}
+for name, (fn, budget, comm_dtype) in hybrid_cases.items():
+    jf = jax.jit(fn)
+    with tape() as recs:
+        compiled = jf.lower(qh, kh, vh).compile()
+    hlo = compiled.as_text()
+    assert_budget(hlo, budget, W, records=recs)
+    hbytes[name] = tape_summary(recs).get("total_bytes", 0)
+    res["cases"].append({
+        "name": f"{name}@S{Sh}", "seq_len": Sh,
+        "comm_dtype": comm_dtype,
+        "wall": bench(jf, (qh, kh, vh)),
+        "comm": tape_summary(recs),
+        "hlo_collectives": collective_counts(hlo, W),
+        "hlo_bytes": sum(c.traffic_bytes
+                         for c in parse_collectives(hlo, W)),
+    })
+# the acceptance inequality: ulysses per-device wire bytes beat the K/V
+# allgather at this head ratio (and both are budget-asserted above)
+assert 0 < hbytes["hybrid_ulysses"] < hbytes["hybrid_allgather"], hbytes
 print(json.dumps(res))
 """
 

@@ -348,9 +348,11 @@ constants by repro/launch/mesh.py (DATA_AXIS, SEQ_AXIS, MODEL_AXIS,
 POD_AXIS), and mesh.py is the ONLY module allowed to spell the strings.
 Everything else — PartitionSpec entries, shard_map axis_names, psum/
 all_gather axis arguments, sharding-rule tables, budget keys — must use
-the constants, so renaming an axis (e.g. when the ROADMAP's 3D Ulysses
-mesh lands) is a one-line change the type of which the compiler can
-check, instead of a repo-wide grep with silent misses.
+the constants, so renaming an axis is a one-line change the type of
+which the compiler can check, instead of a repo-wide grep with silent
+misses. MODEL_AXIS is a LIVE training axis since the 3D DP×SP×TP
+ulysses mesh landed — "model" literals in training code are real
+budget-classification hazards, not dead-axis pedantry.
 
 Denied contexts (not flagged): the axis words also appear as linear-
 attention decay *kinds* (cfg.linear_attn.decay == "data") and phase-

@@ -2,9 +2,10 @@
 
 Where the AST lint reads source, this layer reads the *programs*: it
 lowers and compiles the small-config train steps ((1,8) and (2,4)
-DP×SP splits of the 8 virtual devices) plus the serve decode step, and
-statically asserts the program-level invariants the HLO collective
-budgets (``repro.comm.budget``) don't cover:
+DP×SP splits of the 8 virtual devices, plus the (2,2,2) DP×SP×TP
+ulysses hybrid step) plus the serve decode step, and statically
+asserts the program-level invariants the HLO collective budgets
+(``repro.comm.budget``) don't cover:
 
 * SAN201 — zero host transfers (no infeed/outfeed/host custom-calls);
 * SAN202 — zero f64 (or c128) ops;
@@ -113,11 +114,14 @@ def _check_wire_dtype(label: str, lowered_text: str, mesh,
     n_seq_exchanges = 0
     for c in H.parse_stablehlo_collectives(lowered_text):
         if c.op not in ("all-gather", "reduce-scatter") or c.groups is None:
-            continue
+            continue        # model-axis all-to-alls are the ulysses head
+            # repartition (a legitimate mixed-dtype wire: packed q‖k‖v in
+            # the narrow dtype, attention output in compute dtype) — not
+            # part of the sequence-wire contract
         axes = H.group_axes([list(g) for g in c.groups], mesh)
-        if axes != (SEQ_AXIS,):
-            continue        # ZeRO-1 data gather / grad reduce: fp32 by
-            # design, not part of the comm_dtype contract
+        if SEQ_AXIS not in axes:
+            continue        # ZeRO-1 (data, model) gather / grad reduce:
+            # fp32 by design, not part of the comm_dtype contract
         n_seq_exchanges += 1
         if c.dtype != want:
             out.append(Finding(
@@ -165,6 +169,18 @@ def _smoke_cfg():
     return get_smoke("linear-llama3-1b")
 
 
+def _hybrid_smoke_cfg():
+    """Tiny linear+softmax hybrid — the program that actually carries
+    the ulysses model-axis All-to-Alls on a 3D mesh."""
+    from repro.configs.base import (LayerSpec, LinearAttnConfig,
+                                    ModelConfig)
+    return ModelConfig(
+        name="hybrid-smoke", family="hybrid", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=160, vocab_size=512,
+        pattern=(LayerSpec(mixer="linear"), LayerSpec(mixer="softmax")),
+        linear_attn=LinearAttnConfig(feature_map="identity", decay="none"))
+
+
 def _require_devices(n: int):
     import jax
     have = len(jax.devices())
@@ -176,27 +192,36 @@ def _require_devices(n: int):
             f"jax), or export it yourself")
 
 
-def lower_train_step(dp: int, sp: int, *, comm_dtype: str = "bf16",
-                     zero1: bool = True, batch: int = 8, seq: int = 64):
-    """Lower (not compile) one 2D DP×SP smoke train step; returns
+def lower_train_step(dp: int, sp: int, tp: int = 1, *,
+                     comm_strategy: str = "allgather",
+                     comm_dtype: str = "bf16",
+                     zero1: bool = True, batch: int = 8, seq: int = 64,
+                     cfg=None):
+    """Lower (not compile) one DP×SP(×TP) smoke train step; returns
     ``(lowered, mesh)``. Fresh closures per call, so calling twice gives
-    the two independent lowerings SAN205 needs."""
+    the two independent lowerings SAN205 needs. ``tp > 1`` builds the
+    3D mesh (pass ``comm_strategy="ulysses"`` + the hybrid smoke config
+    to put model-axis All-to-Alls in the program)."""
     import jax
     import jax.numpy as jnp
 
+    from repro.comm.spec import CommSpec
     from repro.configs.base import RunConfig
     from repro.launch.mesh import make_training_mesh
     from repro.sharding.rules import make_plan
     from repro.train.step import init_state, make_train_step
 
-    _require_devices(dp * sp)
-    cfg = _smoke_cfg()
-    mesh = make_training_mesh(dp, sp)
+    _require_devices(dp * sp * tp)
+    cfg = cfg if cfg is not None else _smoke_cfg()
+    mesh = make_training_mesh(dp, sp, tp)
     plan = make_plan(mesh, "train", global_batch=batch,
-                     n_kv_heads=cfg.n_kv_heads, comm_dtype=comm_dtype,
+                     n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
+                     comm=CommSpec(strategy=comm_strategy,
+                                   dtype=comm_dtype),
                      zero1=zero1)
-    run = RunConfig(comm_dtype=comm_dtype, zero1=zero1,
-                    dp_degree=dp, sp_degree=sp)
+    run = RunConfig(comm_strategy=comm_strategy, comm_dtype=comm_dtype,
+                    zero1=zero1, dp_degree=dp, sp_degree=sp,
+                    tp_degree=tp)
     state = jax.eval_shape(
         lambda: init_state(jax.random.PRNGKey(0), cfg, run, plan))
     sds = jax.ShapeDtypeStruct
@@ -230,12 +255,17 @@ def lower_decode_step(*, batch: int = 2, max_len: int = 64):
     return jax.jit(_decode, donate_argnums=(2,)).lower(params, tok, cache)
 
 
-def sanitize_train_step(dp: int, sp: int, *, comm_dtype: str = "bf16",
-                        zero1: bool = True,
+def sanitize_train_step(dp: int, sp: int, tp: int = 1, *,
+                        comm_strategy: str = "allgather",
+                        comm_dtype: str = "bf16",
+                        zero1: bool = True, cfg=None,
                         determinism: bool = True) -> List[Finding]:
-    label = f"train_step[dp={dp},sp={sp},comm_dtype={comm_dtype}]"
-    lowered, mesh = lower_train_step(dp, sp, comm_dtype=comm_dtype,
-                                     zero1=zero1)
+    label = (f"train_step[dp={dp},sp={sp},tp={tp},"
+             f"comm={comm_strategy},comm_dtype={comm_dtype}]")
+    lowered, mesh = lower_train_step(dp, sp, tp,
+                                     comm_strategy=comm_strategy,
+                                     comm_dtype=comm_dtype,
+                                     zero1=zero1, cfg=cfg)
     compiled_text = lowered.compile().as_text()
     findings = sanitize_text(
         label, compiled_text=compiled_text, lowered_text=lowered.as_text(),
@@ -243,7 +273,9 @@ def sanitize_train_step(dp: int, sp: int, *, comm_dtype: str = "bf16",
     if determinism:
         findings += check_determinism(
             label, lambda: lower_train_step(
-                dp, sp, comm_dtype=comm_dtype, zero1=zero1)[0].as_text())
+                dp, sp, tp, comm_strategy=comm_strategy,
+                comm_dtype=comm_dtype, zero1=zero1,
+                cfg=cfg)[0].as_text())
     return findings
 
 
@@ -255,11 +287,13 @@ def sanitize_decode_step() -> List[Finding]:
 
 
 def run_sanitizer() -> AnalysisResult:
-    """The CI battery: (1,8) + (2,4) train steps (bf16 wire) and the
-    serve decode step."""
+    """The CI battery: (1,8) + (2,4) train steps (bf16 wire), the
+    (2,2,2) ulysses hybrid train step, and the serve decode step."""
     result = AnalysisResult()
     result.findings += sanitize_train_step(1, 8)
     result.findings += sanitize_train_step(2, 4)
+    result.findings += sanitize_train_step(
+        2, 2, 2, comm_strategy="ulysses", cfg=_hybrid_smoke_cfg())
     result.findings += sanitize_decode_step()
-    result.checked["programs"] = 3
+    result.checked["programs"] = 4
     return result

@@ -18,16 +18,23 @@ See docs/communication.md for the strategy matrix and overlap timeline.
 """
 
 from repro.comm.primitives import (CommRecord, allgather_states,  # noqa: F401
-                                   auto_slices, pipelined_prefix_exchange,
+                                   alltoall, auto_slices,
+                                   pipelined_prefix_exchange,
                                    reduce_scatter_grads, ring_sendrecv,
                                    tape, tape_summary, wire_dtype)
 from repro.comm.overlap import DoubleBufferedScheduler   # noqa: F401
-from repro.comm.strategy import (PrefixExchange, get_strategy,  # noqa: F401
-                                 pack_state, unpack_state)
+from repro.comm.strategy import (PrefixExchange, get_budget_fn,  # noqa: F401
+                                 get_context_budget_fn, get_strategy,
+                                 pack_state, register_strategy,
+                                 registered_strategies, unpack_state)
+from repro.comm.spec import CommSpec, resolve_comm_spec   # noqa: F401
 from repro.comm.budget import (CollectiveBudget, assert_budget,  # noqa: F401
-                               check_budget, comm_itemsize, lasp2_budget,
+                               check_budget, comm_itemsize,
+                               hybrid_context_budget, lasp2_budget,
                                packed_state_bytes, ring_baseline_budget)
 
-STRATEGY_NAMES = ("allgather", "ring", "pipelined")
+# Snapshot of the registry at import; prefer registered_strategies()
+# which reflects later register_strategy() calls.
+STRATEGY_NAMES = registered_strategies()
 OVERLAP_MODES = ("overlap", "none")
 COMM_DTYPES = ("fp32", "bf16")

@@ -23,6 +23,7 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass
+from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -196,6 +197,69 @@ def psum_packed(x, axes, *, group_size: int, tag: str = ""):
                        2 * (group_size - 1) * pb // max(group_size, 1),
                        steps=1, group=group_size, tag=tag))
     return jax.lax.psum(x, axes)
+
+
+def multi_axis_index(axis):
+    """``jax.lax.axis_index`` that also accepts a TUPLE of axis names.
+
+    Returns the mixed-radix rank index with the FIRST axis most
+    significant — the same ordering ``jax.lax.all_gather`` uses when
+    concatenating over a tuple of axes, so the value is directly usable
+    as the gathered-chunk index ``t`` of this rank's shard.
+    """
+    if isinstance(axis, (tuple, list)):
+        t = jax.lax.axis_index(axis[0])
+        for a in axis[1:]:
+            t = t * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return t
+    return jax.lax.axis_index(axis)
+
+
+def _alltoall_impl(x, axis, axis_size, split_axis, concat_axis, tag):
+    pb = _nbytes(x)
+    _record(CommRecord("all-to-all", pb,
+                       (axis_size - 1) * pb // max(axis_size, 1), steps=1,
+                       group=axis_size, tag=tag))
+    return jax.lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _alltoall(x, axis, axis_size, split_axis, concat_axis, tag):
+    return _alltoall_impl(x, axis, axis_size, split_axis, concat_axis, tag)
+
+
+def _alltoall_fwd(x, axis, axis_size, split_axis, concat_axis, tag):
+    return _alltoall_impl(x, axis, axis_size, split_axis, concat_axis,
+                          tag), None
+
+
+def _alltoall_bwd(axis, axis_size, split_axis, concat_axis, tag, _, ct):
+    # The AD transpose of an all-to-all is the all-to-all with the split/
+    # concat dims swapped — the mirrored pair, recorded on the tape like
+    # any forward exchange.
+    return (_alltoall_impl(ct, axis, axis_size, concat_axis, split_axis,
+                           f"{tag}.bwd" if tag else "alltoall.bwd"),)
+
+
+_alltoall.defvjp(_alltoall_fwd, _alltoall_bwd)
+
+
+def alltoall(x, axis: str, *, axis_size: int, split_axis: int,
+             concat_axis: int, tag: str = ""):
+    """Tiled All-to-All over mesh axis ``axis`` — the Ulysses repartition.
+
+    Splits ``split_axis`` into ``axis_size`` chunks (chunk j to rank j),
+    concatenating the received chunks along ``concat_axis`` in rank
+    order: ``dim[split] /= g``, ``dim[concat] *= g``. Traffic per device
+    (ring model): ``(g-1)/g × payload`` — each rank keeps its own chunk.
+    One collective call = one sequential step.
+
+    Differentiable via ``custom_vjp``: the backward is the mirrored
+    all-to-all (split/concat swapped), so autodiff through a
+    seq→head→seq repartition pair costs exactly two more all-to-alls
+    and the trace-time tape stays honest in both directions.
+    """
+    return _alltoall(x, axis, axis_size, split_axis, concat_axis, tag)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,115 @@
+"""One validated communication spec.
+
+Before this module the three comm knobs — strategy, overlap mode, wire
+dtype — were threaded as three loose keyword arguments through every
+layer of the stack (``RunConfig`` → ``make_plan`` → ``SPConfig`` →
+strategy call sites), each hop re-declaring the same trio with the same
+defaults. :class:`CommSpec` collapses them into a single frozen,
+self-validating object that is constructed once and passed whole.
+
+Legacy call sites keep working: :func:`resolve_comm_spec` accepts the
+old ``comm_strategy=`` / ``overlap=`` / ``comm_dtype=`` keywords, folds
+them into a spec, and emits a :class:`DeprecationWarning` ONCE per
+process (the first legacy use wins; subsequent ones are silent so a big
+old codebase doesn't drown in warnings).
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class CommSpec:
+    """The full communication configuration as one value.
+
+    ``strategy``: inter-chunk / context exchange strategy — any name in
+    :func:`repro.comm.strategy.registered_strategies`.
+    ``overlap``: comm/compute overlap mode (``"overlap"`` | ``"none"``).
+    ``dtype``: wire dtype knob (``"fp32"`` | ``"bf16"``); ``None`` is
+    normalized to ``"fp32"``.
+    """
+
+    strategy: str = "allgather"
+    overlap: str = "overlap"
+    dtype: Optional[str] = "fp32"
+
+    def __post_init__(self):
+        # Local imports: strategy.py is the registry owner and must be
+        # importable without this module (it is not), and primitives
+        # owns the dtype registry.
+        from repro.comm.overlap import MODES
+        from repro.comm.primitives import _COMM_DTYPES
+        from repro.comm.strategy import registered_strategies
+
+        names = registered_strategies()
+        if self.strategy not in names:
+            raise ValueError(
+                f"unknown comm strategy {self.strategy!r}; expected one "
+                f"of {names}")
+        if self.overlap not in MODES:
+            raise ValueError(
+                f"unknown overlap mode {self.overlap!r}; expected one of "
+                f"{MODES}")
+        if self.dtype is None:
+            object.__setattr__(self, "dtype", "fp32")
+        elif self.dtype not in _COMM_DTYPES:
+            raise ValueError(
+                f"unknown comm_dtype {self.dtype!r}; expected one of "
+                f"{tuple(_COMM_DTYPES)}")
+
+
+_warned = False
+
+
+def _reset_deprecation_state():
+    """Re-arm the warn-once latch (tests only)."""
+    global _warned
+    _warned = False
+
+
+def _warn_once(where: str):
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(
+        f"passing comm_strategy= / overlap= / comm_dtype= keywords"
+        f"{' to ' + where if where else ''} is deprecated; pass one "
+        f"comm=CommSpec(strategy=..., overlap=..., dtype=...) instead "
+        f"(this warning fires once per process)",
+        DeprecationWarning, stacklevel=4)
+
+
+def resolve_comm_spec(comm: Optional[CommSpec] = None, *,
+                      strategy: Optional[str] = None,
+                      overlap: Optional[str] = None,
+                      dtype: Optional[str] = None,
+                      base: Optional[CommSpec] = None,
+                      where: str = "") -> CommSpec:
+    """Fold a new-style ``comm=CommSpec`` and/or legacy loose keywords
+    into one validated :class:`CommSpec`.
+
+    * only ``comm`` (or nothing): return it (or ``base``/defaults) — no
+      warning.
+    * legacy keywords: deprecation-warn once, then apply them as
+      overrides on top of ``base`` (or the defaults).
+    * both ``comm`` and legacy keywords: ambiguous — raise.
+    """
+    legacy = {k: v for k, v in
+              (("strategy", strategy), ("overlap", overlap),
+               ("dtype", dtype)) if v is not None}
+    if comm is not None:
+        if legacy:
+            raise ValueError(
+                f"pass either comm=CommSpec(...) or the deprecated loose "
+                f"keywords, not both (got comm= and {tuple(legacy)})"
+                + (f" in {where}" if where else ""))
+        return comm
+    spec = base if base is not None else CommSpec()
+    if not legacy:
+        return spec
+    _warn_once(where)
+    return replace(spec, **legacy)

@@ -141,19 +141,104 @@ class PipelinedStrategy(CommStrategy):
         return PrefixExchange(m_prev, intra, None, None)
 
 
-_STRATEGIES = {
-    "allgather": AllGatherStrategy,
-    "ring": RingStrategy,
-    "pipelined": PipelinedStrategy,
-}
+class UlyssesStrategy(AllGatherStrategy):
+    """DeepSpeed-Ulysses head-parallel strategy.
+
+    The ulysses mechanism lives on the LASP-2H *softmax* context path
+    (``repro.core.lasp2h.ulysses_context_attention``): two All-to-Alls
+    repartition q/k/v from sequence-sharded to head-sharded layout and
+    back around a full-sequence flash attention. The *linear* layers
+    have no per-token context to repartition — their inter-chunk state
+    exchange under ulysses is exactly LASP-2's single state AllGather,
+    hence the subclass.
+    """
+
+    name = "ulysses"
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry: the single dispatch point for strategy names.
+# ---------------------------------------------------------------------------
+
+class _StrategyEntry(NamedTuple):
+    exchange_fn: Callable[..., CommStrategy]
+    budget_fn: Optional[Callable]
+    context_budget_fn: Optional[Callable]
+
+
+_REGISTRY: "dict[str, _StrategyEntry]" = {}
+
+
+def register_strategy(name: str, exchange_fn: Callable[..., CommStrategy],
+                      budget_fn: Optional[Callable] = None, *,
+                      context_budget_fn: Optional[Callable] = None) -> None:
+    """Register a comm strategy under ``name``.
+
+    ``exchange_fn(comm_dtype=...)`` builds the :class:`CommStrategy`
+    (any callable with that signature — the built-ins pass their class).
+    ``budget_fn(world, *, with_grad, backward, n_slices, state_bytes)``
+    states the strategy's linear-layer :class:`CollectiveBudget` (what
+    ``lasp2_budget`` dispatches to). ``context_budget_fn`` states the
+    LASP-2H softmax context budget (``hybrid_context_budget``); ``None``
+    means "uses the default K/V AllGather context path".
+
+    Re-registering a name replaces the entry (tests swap in fakes).
+    """
+    if not callable(exchange_fn):
+        raise TypeError(f"exchange_fn for {name!r} must be callable, "
+                        f"got {type(exchange_fn).__name__}")
+    _REGISTRY[name] = _StrategyEntry(exchange_fn, budget_fn,
+                                     context_budget_fn)
+
+
+def registered_strategies() -> tuple:
+    """Registered strategy names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def _entry(name: str) -> _StrategyEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm strategy {name!r}; expected one of "
+            f"{registered_strategies()}") from None
 
 
 def get_strategy(name: str,
                  comm_dtype: Optional[str] = None) -> CommStrategy:
-    try:
-        cls = _STRATEGIES[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown comm strategy {name!r}; expected one of "
-            f"{tuple(_STRATEGIES)}") from None
-    return cls(comm_dtype=comm_dtype)
+    return _entry(name).exchange_fn(comm_dtype=comm_dtype)
+
+
+def get_budget_fn(name: str) -> Callable:
+    fn = _entry(name).budget_fn
+    if fn is None:
+        raise ValueError(f"strategy {name!r} registered without a "
+                         f"budget_fn")
+    return fn
+
+
+def get_context_budget_fn(name: str) -> Callable:
+    entry = _entry(name)
+    if entry.context_budget_fn is not None:
+        return entry.context_budget_fn
+    from repro.comm.budget import allgather_context_budget
+    return allgather_context_budget
+
+
+def _register_builtins():
+    # One-way import: budget.py never imports this module at load time
+    # (lasp2_budget resolves the registry lazily inside the call).
+    from repro.comm import budget as _b
+    register_strategy("allgather", AllGatherStrategy,
+                      _b.allgather_state_budget)
+    register_strategy("ring", RingStrategy, _b.ring_state_budget)
+    register_strategy("pipelined", PipelinedStrategy, _b.ring_state_budget)
+    # ulysses goes through the same public API as any out-of-tree
+    # strategy: allgather linear-state exchange, a2a context budget.
+    register_strategy("ulysses", UlyssesStrategy,
+                      _b.allgather_state_budget,
+                      context_budget_fn=_b.ulysses_context_budget)
+
+
+_register_builtins()

@@ -260,17 +260,29 @@ class RunConfig:
     bf16_params: bool = False        # §Perf: bf16 weight storage (f32 Adam moments)
     microbatch_tokens: int = 4096    # per-device per-microbatch token target
     grad_compression: bool = False   # error-feedback bf16 cross-pod allreduce
-    # SP communication subsystem (repro/comm, docs/communication.md):
-    comm_strategy: str = "allgather"   # allgather | ring | pipelined
+    # SP communication subsystem (repro/comm, docs/communication.md).
+    # The CLI-facing string triple; ``comm_spec()`` folds it into the
+    # one validated ``repro.comm.CommSpec`` the plan factory consumes.
+    comm_strategy: str = "allgather"   # allgather | ring | pipelined | ulysses
     comm_overlap: str = "overlap"      # overlap | none (A/B benchmarking)
     comm_dtype: str = "fp32"           # fp32 | bf16 exchange payloads
     #   (bf16 halves SP state/KV all-gather bytes; combines stay fp32)
-    # 2D DP×SP training mesh (docs/parallelism.md): dp_degree × sp_degree
-    # devices, batch over "data" × sequence over "sequence". 0 = unset
-    # (launchers fall back to single-device or the legacy 1-D mesh).
+    # DP×SP(×TP) training mesh (docs/parallelism.md): dp_degree ×
+    # sp_degree × tp_degree devices, batch over "data" × sequence over
+    # "sequence" (and "model" when tp_degree > 1 — the 3D ulysses
+    # deployment). 0 = unset (launchers fall back to single-device or
+    # the legacy 1-D mesh; tp_degree 0 means 1).
     dp_degree: int = 0
     sp_degree: int = 0
+    tp_degree: int = 0
     # Kernel dispatch (repro/kernels/ops.py): intra-chunk/attention compute
     # path — "xla" | "pallas" | "interpret"; None = platform default
     # (pallas on TPU, xla elsewhere).
     kernel_backend: Optional[str] = None
+
+    def comm_spec(self):
+        """The validated ``repro.comm.CommSpec`` for this run — the one
+        object that threads strategy/overlap/wire-dtype to the plan."""
+        from repro.comm.spec import CommSpec
+        return CommSpec(strategy=self.comm_strategy,
+                        overlap=self.comm_overlap, dtype=self.comm_dtype)

@@ -58,6 +58,7 @@ from repro.core.compat import shard_map as _shard_map
 
 from repro.comm import primitives as comm_primitives
 from repro.comm.overlap import DoubleBufferedScheduler
+from repro.comm.spec import CommSpec, resolve_comm_spec
 from repro.comm.strategy import get_strategy
 from repro.core.linear_attention import (ChunkOutputs, chunk_summaries,
                                          pick_block, suffix_grad_combine)
@@ -69,31 +70,78 @@ from repro.launch.mesh import SEQ_AXIS
 class SPConfig:
     """How the sequence dimension is sharded for LASP-2 style layers.
 
-    ``comm_strategy`` / ``overlap`` are the default exchange strategy and
-    overlap mode for layers run under this config (overridable per call
+    ``comm`` is the single :class:`repro.comm.CommSpec` carrying the
+    exchange strategy / overlap mode / wire dtype (overridable per call
     on :func:`lasp2`); see ``repro/comm/strategy.py`` for the matrix.
+    The loose ``comm_strategy`` / ``overlap`` / ``comm_dtype`` keywords
+    are the DEPRECATED spelling — they still construct, fold into
+    ``comm``, and warn once per process — and the attributes of the same
+    names keep reading as plain strings for compatibility.
     ``kernel_backend`` picks the intra-chunk compute path
     (``xla | pallas | interpret``; ``None`` = platform default).
 
+    ``tp_axis`` (3D meshes): a second, head-parallel mesh axis the
+    sequence dimension is ALSO split over — tokens shard over the
+    combined ``(sp_axis, tp_axis)`` with ``sp_axis`` major, so this
+    rank's global chunk index is ``idx(sp_axis)·|tp_axis| +
+    idx(tp_axis)``. Linear-layer state exchanges span the combined axes;
+    the ulysses strategy All-to-Alls over ``tp_axis`` alone.
+
     ``manual=True`` means the caller is ALREADY inside a fully-manual
-    shard_map over ``sp_axis`` (the 2D DP×SP train step in
+    shard_map over the exchange axes (the DP×SP(×TP) train step in
     ``repro.train.step``): inputs are per-shard chunks and :func:`lasp2`
     must run its local body directly — issuing the same collectives over
-    ``sp_axis`` — instead of opening a nested shard_map (nested manual
+    those axes — instead of opening a nested shard_map (nested manual
     regions do not compose on the pinned jax).
     """
 
     mesh: Mesh
     sp_axis: str = SEQ_AXIS    # mesh axis the sequence dim is split over
-    comm_strategy: str = "allgather"   # allgather | ring | pipelined
-    overlap: str = "overlap"           # overlap | none
-    comm_dtype: str = "fp32"           # fp32 | bf16 exchange payloads
+    comm_strategy: Optional[str] = None   # DEPRECATED → comm.strategy
+    overlap: Optional[str] = None         # DEPRECATED → comm.overlap
+    comm_dtype: Optional[str] = None      # DEPRECATED → comm.dtype
     kernel_backend: Optional[str] = None   # xla | pallas | interpret
     manual: bool = False     # caller already inside a manual region
+    comm: Optional[CommSpec] = None       # the one comm spec
+    tp_axis: Optional[str] = None  # head-parallel axis (3D meshes)
+
+    def __post_init__(self):
+        spec = resolve_comm_spec(
+            self.comm, strategy=self.comm_strategy, overlap=self.overlap,
+            dtype=self.comm_dtype, where="SPConfig")
+        object.__setattr__(self, "comm", spec)
+        # Legacy attribute reads keep working as plain strings.
+        object.__setattr__(self, "comm_strategy", spec.strategy)
+        object.__setattr__(self, "overlap", spec.overlap)
+        object.__setattr__(self, "comm_dtype", spec.dtype)
+
+    @property
+    def exchange_axes(self) -> tuple:
+        """Mesh axes the sequence dimension is sharded over, major
+        first — what linear-layer state exchanges span."""
+        if self.tp_axis is not None:
+            return (self.sp_axis, self.tp_axis)
+        return (self.sp_axis,)
+
+    @property
+    def exchange_axis(self):
+        """The ``axis_name`` to hand a collective: the bare axis on 1D/2D
+        configs, the ``(sp_axis, tp_axis)`` tuple on 3D."""
+        axes = self.exchange_axes
+        return axes if len(axes) > 1 else axes[0]
 
     @property
     def degree(self) -> int:
-        return self.mesh.shape[self.sp_axis]
+        """TOTAL sequence-sharding width (product over exchange axes)."""
+        d = 1
+        for a in self.exchange_axes:
+            d *= self.mesh.shape[a]
+        return d
+
+    def chunk_index(self):
+        """This rank's global sequence-chunk index ``t`` (traced; valid
+        inside the manual region / shard_map body)."""
+        return comm_primitives.multi_axis_index(self.exchange_axis)
 
 
 def _cumulative_decay(log_a):
@@ -134,7 +182,7 @@ def _causal_fwd_local(q, k, v, log_a, sp_axis, block_size, axis_size,
     # (2) + (3): the strategy's exchange, overlapped with the intra-chunk
     # kernel by the scheduler. For "allgather" this is THE single
     # collective of LASP-2.
-    t = jax.lax.axis_index(sp_axis)
+    t = comm_primitives.multi_axis_index(sp_axis)
     ex = get_strategy(strategy, comm_dtype).prefix(
         m_loc, a_loc, sp_axis, axis_size, t,
         DoubleBufferedScheduler(overlap),
@@ -289,13 +337,13 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
                            kernel_backend)
         return out.o, out.state
 
-    axis = sp.sp_axis
+    axis = sp.exchange_axis
     w = sp.degree
 
     def local_fn(q_, k_, v_, la_):
         bs = pick_block(q_.shape[-2], block_size)
         m_loc, a_loc = chunk_summaries(k_, v_, la_, block_size=bs)
-        t = jax.lax.axis_index(axis)
+        t = comm_primitives.multi_axis_index(axis)
         ex = get_strategy("allgather", sp.comm_dtype).prefix(
             m_loc, a_loc, axis, w, t, DoubleBufferedScheduler(sp.overlap),
             lambda: _intra_chunk(q_, k_, v_, la_, bs, kernel_backend))
@@ -319,7 +367,7 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
     return _shard_map(
         local_fn, mesh=sp.mesh,
         in_specs=(spec_qkv, spec_qkv, spec_qkv, spec_a),
-        out_specs=(spec_qkv, spec_state), axis_names={axis},
+        out_specs=(spec_qkv, spec_state), axis_names=set(sp.exchange_axes),
         check_vma=False)(q, k, v, log_a)
 
 
@@ -330,6 +378,7 @@ def lasp2_with_state(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
 def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
           causal: bool = True, block_size: int = 128,
           backward: str = "faithful",
+          comm: Optional[CommSpec] = None,
           comm_strategy: Optional[str] = None,
           overlap: Optional[str] = None,
           comm_dtype: Optional[str] = None,
@@ -345,20 +394,21 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
       causal: causal (paper Alg. 2) vs bidirectional (paper Alg. 1).
       backward: "faithful" (paper Alg. 3/4 custom_vjp) or "autodiff".
         Learned/data-dependent ``log_a`` requires "autodiff".
-      comm_strategy: inter-chunk state exchange — "allgather" (paper),
-        "ring" (LASP-1 pattern), "pipelined" (ZeCO-style sliced ring).
-        ``None`` → ``sp.comm_strategy``. The faithful backward is the
-        paper's AllGather algorithm, so non-"allgather" strategies
-        always differentiate via autodiff (their permutes transpose to
-        permutes).
-      overlap: "overlap" (double-buffered, default) or "none" (exchange
-        barriered behind intra-chunk compute — the A/B baseline).
-        ``None`` → ``sp.overlap``.
-      comm_dtype: wire dtype of the state exchange — "fp32" or "bf16"
-        (payload cast before the collective, prefix combine in fp32;
-        bf16 halves the per-layer exchange bytes). ``None`` →
-        ``sp.comm_dtype``. Collective *counts* are untouched — only the
-        bytes change (asserted by the dtype-aware budgets).
+      comm: per-call :class:`repro.comm.CommSpec` override — strategy
+        ("allgather" — the paper; "ring" — LASP-1's pattern; "pipelined"
+        — ZeCO-style sliced ring; "ulysses" — allgather here, the
+        All-to-All lives on the softmax context path), overlap mode
+        ("overlap" double-buffered | "none" barriered A/B baseline), and
+        wire dtype ("fp32" | "bf16": payload cast before the collective,
+        prefix combine in fp32 — bf16 halves the per-layer exchange
+        bytes with collective *counts* untouched, asserted by the
+        dtype-aware budgets). ``None`` → ``sp.comm``. The faithful
+        backward is the paper's AllGather algorithm, so non-"allgather"
+        strategies always differentiate via autodiff (their permutes
+        transpose to permutes).
+      comm_strategy / overlap / comm_dtype: DEPRECATED loose spellings of
+        the same three knobs; folded into ``comm`` with a once-per-process
+        warning.
       kernel_backend: intra-chunk compute path — "xla" (``chunk_scan``),
         "pallas" (fused TPU kernel, trainable via its two-pass backward),
         "interpret" (Pallas interpret mode, for CPU tests).
@@ -381,13 +431,20 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         return jnp.einsum("...sk,...kv->...sv", q.astype(jnp.float32),
                           m_tot).astype(q.dtype)
 
-    axis = sp.sp_axis
+    axis = sp.exchange_axis
     w = sp.degree
-    strategy = comm_strategy if comm_strategy is not None \
-        else sp.comm_strategy
-    ovl = overlap if overlap is not None else sp.overlap
-    cdt = comm_dtype if comm_dtype is not None else sp.comm_dtype
-    get_strategy(strategy, cdt)   # validate both names on every path
+    cs = resolve_comm_spec(comm, strategy=comm_strategy, overlap=overlap,
+                           dtype=comm_dtype, base=sp.comm, where="lasp2()")
+    strategy, ovl, cdt = cs.strategy, cs.overlap, cs.dtype
+    if strategy == "ulysses":
+        # ulysses only changes the softmax context path; the linear-layer
+        # state exchange under it IS LASP-2's allgather.
+        strategy = "allgather"
+    if sp.tp_axis is not None and strategy != "allgather":
+        raise ValueError(
+            f"comm_strategy={strategy!r} does not support the combined "
+            f"(sequence, model) exchange of a 3D mesh — use 'allgather' "
+            f"or 'ulysses'")
     if strategy != "allgather" and backward == "faithful":
         backward = "autodiff"   # faithful == the paper's AllGather pattern
     if not causal and strategy != "allgather":
@@ -430,7 +487,7 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
         return _shard_map(
             mapped, mesh=sp.mesh,
             in_specs=(spec_qkv, spec_qkv, spec_qkv, spec_a),
-            out_specs=spec_qkv, axis_names={axis},
+            out_specs=spec_qkv, axis_names=set(sp.exchange_axes),
             check_vma=False)(q, k, v, log_a)
 
     if backward == "faithful":
@@ -445,7 +502,7 @@ def lasp2(q, k, v, log_a=None, *, sp: Optional[SPConfig] = None,
 
     return _shard_map(
         mapped_nc, mesh=sp.mesh, in_specs=(spec_qkv, spec_qkv, spec_qkv),
-        out_specs=spec_qkv, axis_names={axis},
+        out_specs=spec_qkv, axis_names=set(sp.exchange_axes),
         # check_vma=False: scan carries start as unvarying zeros; the
         # varying-manual-axes static check cannot see that they immediately
         # combine with varying data. Collective placement is verified by the

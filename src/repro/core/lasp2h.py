@@ -105,23 +105,14 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
             q, k, v, causal=causal, sliding_window=sliding_window,
             scale=scale, backend=kernel_backend)
 
-    axis = sp.sp_axis
+    axis = sp.exchange_axis
     w = sp.degree
-    wire = comm_primitives.wire_dtype(sp.comm_dtype)
-
-    def narrow(x):
-        # comm_dtype only ever NARROWS the wire payload: bf16 activations
-        # under the default comm_dtype="fp32" keep their native-dtype
-        # gather (widening them would double the bytes this knob exists
-        # to halve).
-        if jnp.dtype(wire).itemsize < x.dtype.itemsize:
-            return x.astype(wire)
-        return x
+    narrow = _narrow_fn(sp.comm_dtype)
 
     def local_fn(q_, k_, v_):
         # q_: (B, Hq, C, dh); k_/v_: (B, Hkv, C, dh) local chunks.
         c = q_.shape[-2]
-        t = jax.lax.axis_index(axis)
+        t = comm_primitives.multi_axis_index(axis)
         # Alg. 7 line 5: gather K/V chunks; tiled=True concatenates along a
         # new leading dim which we fold into the sequence dim (line 6).
         # comm_dtype on the wire; attention math is fp32 locally either way.
@@ -140,14 +131,170 @@ def allgather_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
             scale=scale, q_offset=t * c, backend=kernel_backend)
 
     if sp.manual:
-        # Already inside the 2D train step's fully-manual shard_map:
+        # Already inside the train step's fully-manual shard_map:
         # q/k/v are this rank's sequence chunks (see SPConfig.manual).
         return local_fn(q, k, v)
 
     spec = P(None, None, axis, None)
     return _shard_map(local_fn, mesh=sp.mesh,
                          in_specs=(spec, spec, spec), out_specs=spec,
-                         axis_names={axis}, check_vma=False)(q, k, v)
+                         axis_names=set(sp.exchange_axes),
+                         check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Ulysses head-parallel context attention (DeepSpeed-Ulysses / USP).
+# ---------------------------------------------------------------------------
+
+def _narrow_fn(comm_dtype):
+    wire = comm_primitives.wire_dtype(comm_dtype)
+
+    def narrow(x):
+        # comm_dtype only ever NARROWS the wire payload: bf16 activations
+        # under the default comm_dtype="fp32" keep their native-dtype
+        # exchange (widening them would double the bytes this knob exists
+        # to halve).
+        if jnp.dtype(wire).itemsize < x.dtype.itemsize:
+            return x.astype(wire)
+        return x
+
+    return narrow
+
+
+def check_ulysses_heads(hq: int, hkv: int, degree: int,
+                        axis: str = "?") -> None:
+    """Fail loudly when head counts don't split over the head-parallel
+    axis — the GQA-aware partitioning constraint of the ulysses path."""
+    if hq % degree or hkv % degree:
+        raise ValueError(
+            f"ulysses head-parallelism needs n_heads and n_kv_heads "
+            f"divisible by the head-parallel axis size: n_heads={hq}, "
+            f"n_kv_heads={hkv}, axis {axis!r} size {degree}. Pick a tp "
+            f"degree dividing both (GQA: kv heads are the binding "
+            f"constraint) or use comm_strategy='allgather'.")
+
+
+def pack_ulysses(q, k, v, degree: int):
+    """Pack q/k/v into ONE tensor whose head dim splits contiguously into
+    per-destination blocks for a tiled All-to-All.
+
+    Block ``i`` (destination rank ``i`` on the head-parallel axis) is
+    ``q_heads_i ‖ k_heads_i ‖ v_heads_i`` — ``(Hq + 2·Hkv)/g`` heads. A
+    naive ``q ‖ k ‖ v`` concat would NOT work: ``all_to_all``'s
+    contiguous equal split would hand rank 0 only query heads.
+
+    q: (B, Hq, C, dh); k/v: (B, Hkv, C, dh) → (B, Hq+2·Hkv, C, dh).
+    """
+    b, hq, c, dh = q.shape
+    hkv = k.shape[1]
+    g = degree
+    check_ulysses_heads(hq, hkv, g)
+    qr = q.reshape(b, g, hq // g, c, dh)
+    kr = k.astype(q.dtype).reshape(b, g, hkv // g, c, dh)
+    vr = v.astype(q.dtype).reshape(b, g, hkv // g, c, dh)
+    packed = jnp.concatenate([qr, kr, vr], axis=2)
+    return packed.reshape(b, hq + 2 * hkv, c, dh)
+
+
+def unpack_ulysses(block, hq: int, hkv: int, degree: int):
+    """Split one received head block back into (q, k, v) head subsets.
+
+    block: (B, (Hq+2·Hkv)/g, S, dh) — this rank's head block with the
+    full (or All-to-All-widened) token range riding along. Inverse of
+    the per-destination layout of :func:`pack_ulysses`.
+    """
+    nq, nkv = hq // degree, hkv // degree
+    return (block[:, :nq], block[:, nq:nq + nkv],
+            block[:, nq + nkv:nq + 2 * nkv])
+
+
+def ulysses_context_attention(q, k, v, *, sp: Optional[SPConfig] = None,
+                              causal: bool = True,
+                              sliding_window: Optional[int] = None,
+                              scale: Optional[float] = None,
+                              kernel_backend: Optional[str] = None):
+    """DeepSpeed-Ulysses head-parallel context attention for LASP-2H
+    softmax layers (``comm_strategy="ulysses"``).
+
+    Instead of gathering K/V (per-link volume constant in the axis
+    size), TWO All-to-Alls repartition between layouts: packed q‖k‖v
+    goes sequence-sharded → head-sharded (each rank gets a head subset
+    over the full token range), flash attention runs per head subset,
+    and the output All-to-Alls back to sequence-sharded. Per-link volume
+    shrinks with the axis size; backward is the mirrored All-to-All pair
+    (``custom_vjp`` on the primitive).
+
+    On a 2D DP×SP mesh the ulysses axis is ``sp.sp_axis`` and each head
+    subset sees the whole sequence (``q_offset=0``). On a 3D mesh
+    (``sp.tp_axis`` set — the USP composition) the All-to-All runs over
+    the head-parallel ``tp_axis`` alone: received token chunks
+    ``sp_idx·tp + 0..tp-1`` are contiguous, K/V then AllGather over the
+    residual ``sp_axis`` (heads ÷ tp cancels tokens × tp — same bytes as
+    a width-``sp`` 2D K/V gather), and flash runs with
+    ``q_offset = sp_idx · S/sp``.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if kernel_backend is None and sp is not None:
+        kernel_backend = sp.kernel_backend
+
+    from repro.kernels import ops as _ops
+
+    if sp is None or sp.degree == 1:
+        return _ops.flash_attention_op(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            scale=scale, backend=kernel_backend)
+
+    # The ulysses (head-parallel) axis: MODEL on 3D meshes, else the SP
+    # axis itself (classic DeepSpeed-Ulysses).
+    ax_u = sp.tp_axis if sp.tp_axis is not None else sp.sp_axis
+    g = sp.mesh.shape[ax_u]
+    sp_res = sp.mesh.shape[sp.sp_axis] if sp.tp_axis is not None else 1
+    hq, hkv = q.shape[1], k.shape[1]
+    check_ulysses_heads(hq, hkv, g, ax_u)
+    narrow = _narrow_fn(sp.comm_dtype)
+
+    def local_fn(q_, k_, v_):
+        c = q_.shape[-2]
+        # (1) seq→head repartition: ONE tiled All-to-All of the packed
+        # per-destination blocks. Rank-order concat along the token dim
+        # yields contiguous tokens (3D: this sp row's S/sp span).
+        blk = comm_primitives.alltoall(
+            narrow(pack_ulysses(q_, k_, v_, g)), ax_u, axis_size=g,
+            split_axis=1, concat_axis=2, tag="ulysses.in")
+        blk = comm_primitives.upcast_gathered(blk, q_.dtype)
+        ql, kl, vl = unpack_ulysses(blk, hq, hkv, g)
+        if sp_res > 1:
+            # (1b) USP: widen K/V over the residual sequence axis.
+            kl = comm_primitives.upcast_gathered(
+                comm_primitives.allgather_states(
+                    narrow(kl), sp.sp_axis, axis_size=sp_res,
+                    gather_axis=2, tiled=True, tag="ulysses.k"), q_.dtype)
+            vl = comm_primitives.upcast_gathered(
+                comm_primitives.allgather_states(
+                    narrow(vl), sp.sp_axis, axis_size=sp_res,
+                    gather_axis=2, tiled=True, tag="ulysses.v"), q_.dtype)
+            q_offset = jax.lax.axis_index(sp.sp_axis) * (c * g)
+        else:
+            q_offset = 0   # every head subset sees the whole sequence
+        # (2) full-sequence flash attention on this rank's head subset.
+        o = _ops.flash_attention_op(
+            ql, kl, vl, causal=causal, sliding_window=sliding_window,
+            scale=scale, q_offset=q_offset, backend=kernel_backend)
+        # (3) head→seq repartition back: the mirrored All-to-All. Rank-
+        # order concat along the head dim restores the original order.
+        return comm_primitives.alltoall(
+            o, ax_u, axis_size=g, split_axis=2, concat_axis=1,
+            tag="ulysses.out")
+
+    if sp.manual:
+        return local_fn(q, k, v)
+
+    spec = P(None, None, sp.exchange_axis, None)
+    return _shard_map(local_fn, mesh=sp.mesh,
+                      in_specs=(spec, spec, spec), out_specs=spec,
+                      axis_names=set(sp.exchange_axes),
+                      check_vma=False)(q, k, v)
 
 
 # ---------------------------------------------------------------------------

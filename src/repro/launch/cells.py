@@ -151,9 +151,7 @@ def build_cell(arch: str, shape_name: str, mesh: Optional[Mesh], *,
     plan = make_plan(mesh, shape.kind, global_batch=shape.global_batch,
                      n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
                      params_bytes=cfg.param_count() * 2, backend=backend,
-                     comm_strategy=run.comm_strategy,
-                     comm_overlap=run.comm_overlap,
-                     comm_dtype=run.comm_dtype)
+                     comm=run.comm_spec())
     plan.banded_windows = run.banded_windows
 
     if shape.kind == "train":

@@ -14,7 +14,10 @@ axis names:
 * ``SEQ_AXIS`` ("sequence")   — LASP-2 sequence parallelism: every
   inter-chunk state exchange (the paper's single AllGather) runs over this
   axis and ONLY this axis.
-* ``MODEL_AXIS`` ("model")    — tensor parallelism.
+* ``MODEL_AXIS`` ("model")    — tensor parallelism on the production
+  inference meshes; on 3D training meshes it is the ulysses head-parallel
+  axis (All-to-All repartition of attention heads) and additionally
+  carries a share of the sequence for the linear layers.
 * ``POD_AXIS`` ("pod")        — cross-pod data parallelism.
 """
 
@@ -48,18 +51,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
-def make_training_mesh(dp_degree: int, sp_degree: int, *, devices=None):
-    """The paper's 2D deployment mesh (PAPER.md §4, Table 6): batch over
-    ``DATA_AXIS`` × sequence over ``SEQ_AXIS``. ``(1, W)`` is pure
-    sequence parallelism, ``(W, 1)`` pure data parallelism."""
+def make_training_mesh(dp_degree: int, sp_degree: int, tp_degree: int = 1,
+                       *, devices=None):
+    """The training deployment mesh.
+
+    ``tp_degree == 1`` (default): the paper's 2D mesh (PAPER.md §4,
+    Table 6) — batch over ``DATA_AXIS`` × sequence over ``SEQ_AXIS``;
+    ``(1, W)`` is pure sequence parallelism, ``(W, 1)`` pure data
+    parallelism. ``tp_degree > 1``: the 3D DP×SP×TP mesh
+    ``(DATA_AXIS, SEQ_AXIS, MODEL_AXIS)`` — tokens shard over the
+    combined (sequence, model) axes and the model axis additionally
+    carries the ulysses head-parallel All-to-All
+    (docs/parallelism.md §3D)."""
     devices = devices if devices is not None else jax.devices()
-    if dp_degree * sp_degree != len(devices):
+    if dp_degree * sp_degree * tp_degree != len(devices):
         raise ValueError(
-            f"dp_degree×sp_degree = {dp_degree}×{sp_degree} must equal the "
-            f"device count {len(devices)}")
+            f"dp_degree×sp_degree×tp_degree = {dp_degree}×{sp_degree}×"
+            f"{tp_degree} must equal the device count {len(devices)}")
     import numpy as np
-    dev = np.asarray(devices).reshape(dp_degree, sp_degree)
-    return jax.sharding.Mesh(dev, (DATA_AXIS, SEQ_AXIS))
+    if tp_degree == 1:
+        dev = np.asarray(devices).reshape(dp_degree, sp_degree)
+        return jax.sharding.Mesh(dev, (DATA_AXIS, SEQ_AXIS))
+    dev = np.asarray(devices).reshape(dp_degree, sp_degree, tp_degree)
+    return jax.sharding.Mesh(dev, (DATA_AXIS, SEQ_AXIS, MODEL_AXIS))
 
 
 def make_sp_mesh(sp_degree: int, *, devices=None):

@@ -42,12 +42,17 @@ def main():
     ap.add_argument("--sp-degree", type=int, default=0,
                     help="sequence-parallel degree of the 2D training "
                          "mesh (LASP-2 SP over the 'sequence' axis)")
+    ap.add_argument("--tp-degree", type=int, default=0,
+                    help="head-parallel degree of the 3D DP×SP×TP "
+                         "training mesh ('model' axis — the ulysses "
+                         "All-to-All head repartition for hybrid "
+                         "layers; docs/parallelism.md §3D)")
     ap.add_argument("--no-zero1", action="store_true",
                     help="replicate optimizer state instead of ZeRO-1 "
                          "sharding it over the data axis")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--comm-strategy", default="allgather",
-                    choices=["allgather", "ring", "pipelined"],
+                    choices=["allgather", "ring", "pipelined", "ulysses"],
                     help="SP state-exchange strategy (repro/comm)")
     ap.add_argument("--comm-overlap", default="overlap",
                     choices=["overlap", "none"],
@@ -94,30 +99,31 @@ def main():
                     comm_dtype=args.comm_dtype,
                     kernel_backend=args.kernel_backend,
                     zero1=not args.no_zero1,
-                    dp_degree=args.dp_degree, sp_degree=args.sp_degree)
+                    dp_degree=args.dp_degree, sp_degree=args.sp_degree,
+                    tp_degree=args.tp_degree)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
                        seed=args.seed)
     plan = None
-    if run.dp_degree or run.sp_degree:
-        # 2D DP×SP training mesh (the paper's deployment shape): batch
-        # over "data" × sequence over "sequence", ZeRO-1 optimizer state.
+    if run.dp_degree or run.sp_degree or run.tp_degree:
+        # DP×SP(×TP) training mesh (the paper's deployment shape plus
+        # the optional ulysses head-parallel axis): batch over "data" ×
+        # sequence over "sequence" (× "model"), ZeRO-1 optimizer state.
         from repro.launch.mesh import make_training_mesh
         # whichever degree is unset is inferred from the device count
         n_dev = len(jax.devices())
-        dp = run.dp_degree or max(n_dev // max(run.sp_degree, 1), 1)
-        sp = run.sp_degree or max(n_dev // dp, 1)
-        mesh = make_training_mesh(dp, sp)
+        tp = max(run.tp_degree, 1)
+        dp = run.dp_degree or max(n_dev // (max(run.sp_degree, 1) * tp), 1)
+        sp = run.sp_degree or max(n_dev // (dp * tp), 1)
+        mesh = make_training_mesh(dp, sp, tp)
         mb = args.batch // args.microbatches
-        if mb % dp or args.seq % max(sp, 1):
+        if mb % dp or args.seq % max(sp * tp, 1):
             raise SystemExit(
                 f"--batch/microbatches ({mb}) must divide by dp ({dp}) "
-                f"and --seq ({args.seq}) by sp ({sp})")
+                f"and --seq ({args.seq}) by sp×tp ({sp}×{tp})")
         plan = make_plan(mesh, "train", global_batch=args.batch,
-                         n_kv_heads=cfg.n_kv_heads,
+                         n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
                          backend=run.kernel_backend,
-                         comm_strategy=run.comm_strategy,
-                         comm_overlap=run.comm_overlap,
-                         comm_dtype=run.comm_dtype, zero1=run.zero1)
+                         comm=run.comm_spec(), zero1=run.zero1)
     elif args.multi_device and len(jax.devices()) > 1:
         from repro.launch.mesh import DATA_AXIS, auto_axis_types
         mesh = jax.make_mesh((len(jax.devices()),), (DATA_AXIS,),
@@ -125,9 +131,7 @@ def main():
         plan = make_plan(mesh, "train", global_batch=args.batch,
                          n_kv_heads=cfg.n_kv_heads,
                          backend=run.kernel_backend,
-                         comm_strategy=run.comm_strategy,
-                         comm_overlap=run.comm_overlap,
-                         comm_dtype=run.comm_dtype)
+                         comm=run.comm_spec())
     sink = None
     if args.metrics_out:
         from repro.obs import JsonlSink

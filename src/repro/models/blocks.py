@@ -114,6 +114,12 @@ def softmax_apply(params, x, ctx: Ctx, *, window=None, kv_override=None):
         from repro.core.lasp2h import banded_attention_chunked
         nc = sp.degree if sp is not None else 1
         o = banded_attention_chunked(q, k, v, window, nc)
+    elif sp is not None and sp.comm.strategy == "ulysses":
+        # LASP-2H × Ulysses: All-to-All head-parallel repartition instead
+        # of the K/V gather (docs/communication.md §Ulysses).
+        from repro.core.lasp2h import ulysses_context_attention
+        o = ulysses_context_attention(
+            q, k, v, sp=sp, causal=ctx.causal, sliding_window=window)
     elif sp is not None:
         # LASP-2H: AllGather-based context parallelism (paper Alg. 7).
         o = allgather_context_attention(

@@ -120,9 +120,10 @@ def forward(params, tokens, cfg: ModelConfig, plan: Optional[Parallelism]
     x = plan.act(x, "batch", "residual_seq", None)
     positions = jnp.arange(s)
     if plan.sp is not None and plan.sp.manual and plan.sp.degree > 1:
-        # Inside the 2D train step's fully-manual shard_map ``s`` is the
-        # per-rank sequence chunk; RoPE needs absolute positions.
-        positions = jax.lax.axis_index(plan.sp.sp_axis) * s + positions
+        # Inside the train step's fully-manual shard_map ``s`` is the
+        # per-rank sequence chunk; RoPE needs absolute positions. On a 3D
+        # mesh the chunk index spans the combined (sequence, model) axes.
+        positions = plan.sp.chunk_index() * s + positions
 
     enc_out = None
     if cfg.encoder is not None:

@@ -25,6 +25,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm.spec import CommSpec, resolve_comm_spec
 from repro.core.lasp2 import SPConfig
 from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS, SEQ_AXIS
 
@@ -83,9 +84,10 @@ class Parallelism:
     # ``act`` is a no-op (sharding constraints cannot appear inside the
     # manual region; the step's collectives are all explicit).
     manual_axes: tuple = ()
-    # ZeRO-1: mesh axis the flat optimizer state is sharded over (manual
-    # 2D plans only; None = replicated optimizer state).
-    zero1_axis: Optional[str] = None
+    # ZeRO-1: mesh axis (or tuple of axes — 3D plans shard over the
+    # combined (data, model) width) the flat optimizer state is sharded
+    # over (manual plans only; None = replicated optimizer state).
+    zero1_axis: Optional[object] = None  # str | tuple[str, ...] | None
 
     def act(self, x, *dims):
         """with_sharding_constraint by logical dim names (None = replicate)."""
@@ -200,18 +202,21 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
               n_heads: Optional[int] = None,
               params_bytes: Optional[int] = None,
               backend: Optional[str] = None,
-              comm_strategy: str = "allgather",
-              comm_overlap: str = "overlap",
-              comm_dtype: str = "fp32",
+              comm: Optional[CommSpec] = None,
+              comm_strategy: Optional[str] = None,
+              comm_overlap: Optional[str] = None,
+              comm_dtype: Optional[str] = None,
               zero1: bool = True) -> Parallelism:
     """Resolve the activation rules for a cell.
 
-    ``comm_strategy`` / ``comm_overlap`` / ``comm_dtype`` select the SP
-    state-exchange strategy, the comm/compute overlap mode, and the wire
-    dtype (fp32 | bf16 payloads, fp32 combines) for every LASP-2/2H
-    layer run under the plan (``repro/comm``; threaded from
-    ``RunConfig.comm_strategy``/``comm_overlap``/``comm_dtype`` by the
-    launchers).
+    ``comm`` is the validated :class:`repro.comm.CommSpec` selecting the
+    SP state-exchange strategy, the comm/compute overlap mode, and the
+    wire dtype (fp32 | bf16 payloads, fp32 combines) for every
+    LASP-2/2H layer run under the plan (``repro/comm``; threaded from
+    ``RunConfig.comm`` by the launchers). The loose
+    ``comm_strategy``/``comm_overlap``/``comm_dtype`` kwargs are
+    DEPRECATED aliases for the corresponding ``CommSpec`` fields and
+    warn once per process; passing both forms raises.
 
     ``backend`` is the kernel backend (``xla | pallas | interpret``,
     ``None`` = platform default) — it becomes both ``plan.backend`` (the
@@ -236,6 +241,9 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
     prefill shards BATCH over "model" instead (tp_size× less activation
     traffic per device; measured on hymba×prefill_32k).
     """
+    spec = resolve_comm_spec(comm, strategy=comm_strategy,
+                             overlap=comm_overlap, dtype=comm_dtype,
+                             where="make_plan")
     if mesh is None:
         return local_plan(backend)
     axes = mesh.axis_names
@@ -243,23 +251,43 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
     seq_ax = SEQ_AXIS if SEQ_AXIS in axes else None
 
     if shape_kind == "train" and seq_ax is not None:
-        # 2D DP×SP training (paper §4 / Table 6). The sequence axis only
-        # ever carries the LASP-2 state exchange; the single gradient
-        # reduction and the ZeRO-1 update gather run over "data".
+        # 2D DP×SP training (paper §4 / Table 6), or — when the mesh
+        # names a non-trivial MODEL_AXIS — the 3D DP×SP×TP deployment:
+        # tokens shard over the COMBINED (sequence, model) axes
+        # (sequence-major), params stay replicated, and the model axis
+        # additionally carries the ulysses head-parallel All-to-All for
+        # hybrid softmax layers (docs/parallelism.md §3D). The single
+        # gradient reduction and the ZeRO-1 update gather run over the
+        # remaining width ("data", and "model" on 3D meshes).
         dp_ax = DATA_AXIS if DATA_AXIS in axes else None
+        tp_ax = MODEL_AXIS if (MODEL_AXIS in axes
+                               and mesh.shape[MODEL_AXIS] > 1) else None
+        if tp_ax is not None:
+            if spec.strategy not in ("allgather", "ulysses"):
+                raise ValueError(
+                    f"comm strategy {spec.strategy!r} does not support the "
+                    f"3D DP×SP×TP mesh (the ring/pipelined exchanges are "
+                    f"wired for a single sequence axis); use 'allgather' "
+                    f"or 'ulysses'")
+            if spec.strategy == "ulysses" and n_heads is not None:
+                from repro.core.lasp2h import check_ulysses_heads
+                check_ulysses_heads(n_heads, n_kv_heads,
+                                    mesh.shape[tp_ax], tp_ax)
         plan = Parallelism(
             mesh=mesh, backend=backend, fsdp_axis=None, tp_axis=None,
             dp_axes=(dp_ax,) if dp_ax else (),
-            manual_axes=tuple(a for a in (dp_ax, seq_ax) if a is not None),
+            manual_axes=tuple(a for a in (dp_ax, seq_ax, tp_ax)
+                              if a is not None),
             rules={"batch": dp_ax, "seq": seq_ax, "residual_seq": seq_ax,
                    "heads": None, "kv_heads": None, "ff": None,
                    "vocab": None, "experts": None, "cache_seq": None})
-        plan.sp = SPConfig(mesh=mesh, sp_axis=seq_ax, manual=True,
-                           comm_strategy=comm_strategy,
-                           overlap=comm_overlap, comm_dtype=comm_dtype,
-                           kernel_backend=backend)
-        if zero1 and dp_ax is not None and mesh.shape[dp_ax] > 1:
-            plan.zero1_axis = dp_ax
+        plan.sp = SPConfig(mesh=mesh, sp_axis=seq_ax, tp_axis=tp_ax,
+                           manual=True, comm=spec, kernel_backend=backend)
+        zero_axes = tuple(a for a in (dp_ax, tp_ax)
+                          if a is not None and mesh.shape[a] > 1)
+        if zero1 and zero_axes:
+            plan.zero1_axis = (zero_axes if len(zero_axes) > 1
+                               else zero_axes[0])
         return plan
 
     dp = (POD_AXIS, DATA_AXIS) if has_pod else (DATA_AXIS,)
@@ -289,9 +317,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
                       "cache_seq": sp_ax}
         if sp_size > 1:
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
-                               comm_strategy=comm_strategy,
-                               overlap=comm_overlap,
-                               comm_dtype=comm_dtype,
+                               comm=spec,
                                kernel_backend=backend)
         return plan
 
@@ -308,9 +334,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
             plan.rules.update({"batch": POD_AXIS if has_pod else None,
                                "seq": sp_ax})
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
-                               comm_strategy=comm_strategy,
-                               overlap=comm_overlap,
-                               comm_dtype=comm_dtype,
+                               comm=spec,
                                kernel_backend=backend)
     elif shape_kind == "prefill":
         plan.rules = {"batch": POD_AXIS if has_pod else None, "seq": sp_ax,
@@ -319,9 +343,7 @@ def make_plan(mesh: Optional[Mesh], shape_kind: str, *,
                       "experts": tp, "cache_seq": sp_ax}
         if sp_size > 1:
             plan.sp = SPConfig(mesh=mesh, sp_axis=sp_ax,
-                               comm_strategy=comm_strategy,
-                               overlap=comm_overlap,
-                               comm_dtype=comm_dtype,
+                               comm=spec,
                                kernel_backend=backend)
     elif shape_kind == "decode":
         cache_axis = tp if (tp and n_kv_heads % tp_size != 0) else None

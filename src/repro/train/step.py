@@ -10,19 +10,23 @@ Two step flavours, selected by the plan:
 
 * **GSPMD step** (the default): plain jit — XLA places the collectives
   from the plan's sharding constraints.
-* **Manual 2D DP×SP step** (``plan.manual_axes``, docs/parallelism.md):
+* **Manual DP×SP(×TP) step** (``plan.manual_axes``, docs/parallelism.md):
   the whole step runs inside ONE fully-manual shard_map over the
-  ``(data, sequence)`` mesh, so every collective on the wire is explicit
-  and HLO-countable (``repro.comm.budget.train_step_axis_budget``):
+  ``(data, sequence)`` mesh — or ``(data, sequence, model)`` on 3D
+  plans, where tokens shard over the combined (sequence, model) width —
+  so every collective on the wire is explicit and HLO-countable
+  (``repro.comm.budget.train_step_axis_budget``):
 
-    - per LASP-2 layer: the strategy's state exchange over ``sequence``
-      only (1 forward all-gather for "allgather"),
+    - per LASP-2 layer: the strategy's state exchange over the
+      sequence-carrying axes only (1 forward all-gather for
+      "allgather"); hybrid layers under "ulysses" add the head-parallel
+      All-to-All pair over ``model``,
     - per step: exactly ONE gradient reduction touching ``data`` — all
       microbatch-accumulated gradients plus the loss/token counters are
       raveled into a single fp32 vector and psum'd across the mesh,
-    - ZeRO-1 (``plan.zero1_axis``): each rank Adam-updates its 1/dp flat
-      parameter slice and ONE all-gather over ``data`` re-assembles the
-      params (the all-gather-on-update path).
+    - ZeRO-1 (``plan.zero1_axis``): each rank Adam-updates its
+      1/zero_deg flat parameter slice and ONE all-gather over the zero
+      axes re-assembles the params (the all-gather-on-update path).
 """
 
 from __future__ import annotations
@@ -42,7 +46,7 @@ from repro.launch.mesh import POD_AXIS
 from repro.models import model as M
 from repro.optim import adamw
 from repro.optim.compression import compress_sync_tree
-from repro.sharding.rules import Parallelism
+from repro.sharding.rules import Parallelism, _axis_size
 
 MOE_AUX_COEF = 0.01
 
@@ -58,7 +62,8 @@ def init_state(key, cfg: ModelConfig, run: RunConfig,
             lambda x: x.astype(jnp.bfloat16)
             if (x.dtype == jnp.float32 and x.ndim >= 2) else x, params)
     if plan is not None and plan.zero1_axis is not None:
-        opt = adamw.zero1_init(params, plan.mesh.shape[plan.zero1_axis])
+        opt = adamw.zero1_init(params, _axis_size(plan.mesh,
+                                                  plan.zero1_axis))
     else:
         opt = adamw.init(params)
     state = {"params": params, "opt": opt,
@@ -169,7 +174,9 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
     axes = tuple(plan.manual_axes)
     dp_ax = plan.rules.get("batch")
     seq_ax = plan.sp.sp_axis if plan.sp is not None else None
+    tp_ax = plan.sp.tp_axis if plan.sp is not None else None
     zero_ax = plan.zero1_axis
+    zero_deg = _axis_size(mesh, zero_ax)
     dp = mesh.shape[dp_ax] if dp_ax is not None else 1
     world = 1
     for a in axes:
@@ -221,18 +228,21 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
 
         opt = state["opt"]
         if zero_ax is not None:
-            # ZeRO-1: update this rank's 1/dp flat slice, gather params.
+            # ZeRO-1: update this rank's 1/zero_deg flat slice, gather
+            # params. On 3D plans ``zero_ax`` is the combined
+            # (data, model) tuple — ``multi_axis_index`` linearizes it in
+            # the same major-first order the all-gather concatenates.
             pflat, unravel_params = ravel_pytree(params)
             n_params = pflat.size
-            padded = adamw.zero1_padded_size(params, dp)
-            shard = padded // dp
+            padded = adamw.zero1_padded_size(params, zero_deg)
+            shard = padded // zero_deg
             pad = padded - n_params
 
             def padded_slice(vec):
                 vec = jnp.concatenate(
                     [vec.astype(jnp.float32),
                      jnp.zeros((pad,), jnp.float32)])
-                ix = jax.lax.axis_index(zero_ax) * shard
+                ix = comm_primitives.multi_axis_index(zero_ax) * shard
                 return jax.lax.dynamic_slice(vec, (ix,), (shard,))
 
             g_sh = padded_slice(gflat)
@@ -250,7 +260,7 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
             # ZeRO-1's all-gather-on-update: the only other collective
             # touching the data axis.
             gathered = comm_primitives.allgather_states(
-                new_p_sh, zero_ax, axis_size=dp, gather_axis=0,
+                new_p_sh, zero_ax, axis_size=zero_deg, gather_axis=0,
                 tiled=True, tag="zero1.param_gather")
             new_params = unravel_params(gathered[:n_params])
             new_opt = adamw.Zero1AdamState(new_m, new_v, count)
@@ -274,11 +284,15 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
         rows = jax.tree.leaves(batch)[0].shape[1]
         seq = jax.tree.leaves(batch)[0].shape[2]
         sp = mesh.shape[seq_ax] if seq_ax is not None else 1
-        if rows % dp or seq % sp:
+        tp = mesh.shape[tp_ax] if tp_ax is not None else 1
+        if rows % dp or seq % (sp * tp):
             raise ValueError(
-                f"2D DP×SP step needs microbatch rows ({rows}) divisible "
-                f"by dp ({dp}) and seq len ({seq}) by sp ({sp})")
-        bspec = jax.tree.map(lambda _: P(None, dp_ax, seq_ax), batch)
+                f"DP×SP step needs microbatch rows ({rows}) divisible "
+                f"by dp ({dp}) and seq len ({seq}) by sp×tp ({sp}×{tp})")
+        # Tokens shard over the COMBINED (sequence, model) axes on 3D
+        # plans — sequence-major, matching SPConfig.exchange_axes.
+        token_ax = seq_ax if tp_ax is None else (seq_ax, tp_ax)
+        bspec = jax.tree.map(lambda _: P(None, dp_ax, token_ax), batch)
         sspec = jax.tree.map(lambda _: P(), state)
         if zero_ax is not None:
             sspec["opt"] = adamw.Zero1AdamState(

@@ -310,5 +310,103 @@ def _():
     assert s["total_bytes"] == (W - 1) * m_bytes
 
 
+# --- ulysses (head-parallel All-to-All) -------------------------------------
+
+@check("ulysses CP == full attention (+grads) on a 2-wide SEQ axis")
+def _():
+    """Classic (1D) ulysses: heads repartition over the sequence axis
+    itself — full-sequence flash per head subset, two All-to-Alls on
+    the wire, output and grads matching the unsharded oracle."""
+    from repro.core.lasp2h import (allgather_context_attention,
+                                   ulysses_context_attention)
+
+    mesh2 = make_sp_mesh(2)
+    spu = SPConfig(mesh=mesh2, sp_axis=SEQ_AXIS)
+    Hq, Hkv, dh = 8, 2, 32
+    qs = jax.random.normal(ks[0], (B, Hq, S, dh)) * 0.5
+    ks_ = jax.random.normal(ks[1], (B, Hkv, S, dh)) * 0.5
+    vs = jax.random.normal(ks[2], (B, Hkv, S, dh)) * 0.5
+    ref = allgather_context_attention(qs, ks_, vs, sp=None)
+    o = jax.jit(lambda a, b, c: ulysses_context_attention(
+        a, b, c, sp=spu))(qs, ks_, vs)
+    np.testing.assert_allclose(o, ref, rtol=2e-4, atol=2e-4)
+    g1 = jax.jit(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+        ulysses_context_attention(a, b, c, sp=spu))),
+        argnums=(0, 1, 2)))(qs, ks_, vs)
+    g0 = jax.jit(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+        allgather_context_attention(a, b, c, sp=None))),
+        argnums=(0, 1, 2)))(qs, ks_, vs)
+    for a_, b_ in zip(g1, g0):
+        np.testing.assert_allclose(a_, b_, rtol=1e-3, atol=1e-3)
+
+
+@check("ulysses budget: 2 fwd / 4 fwd+bwd All-to-Alls, tape == ceiling")
+def _():
+    from repro.comm.budget import hybrid_context_budget
+    from repro.core.lasp2h import ulysses_context_attention
+
+    mesh2 = make_sp_mesh(2)
+    spu = SPConfig(mesh=mesh2, sp_axis=SEQ_AXIS)
+    Hq, Hkv, dh = 8, 2, 32
+    qs = jax.random.normal(ks[0], (B, Hq, S, dh)) * 0.5
+    ks_ = jax.random.normal(ks[1], (B, Hkv, S, dh)) * 0.5
+    vs = jax.random.normal(ks[2], (B, Hkv, S, dh)) * 0.5
+
+    import re
+    with tape() as recs:
+        txt = compiled_hlo(lambda a, b, c: ulysses_context_attention(
+            a, b, c, sp=spu), qs, ks_, vs)
+    assert len(re.findall(r"all-to-all\(", txt)) == 2
+    assert not re.search(r"all-gather\(|collective-permute\(", txt)
+    budget = hybrid_context_budget("ulysses", 2, sp=1, b=B, hq=Hq,
+                                   hkv=Hkv, c=S // 2, dh=dh)
+    assert budget.counts == {"all-to-all": 2}
+    s = tape_summary(recs)
+    assert s["all-to-all_count"] == 2
+    assert s["total_bytes"] == budget.max_traffic["all-to-all"]
+    # fwd+bwd: the custom_vjp mirrors each All-to-All — 4 total, and
+    # the with_grad ceiling is byte-exact (the in-leg cotangent arrives
+    # in the wire dtype)
+    with tape() as recs:
+        txt = compiled_hlo(jax.grad(lambda a, b, c: jnp.sum(jnp.sin(
+            ulysses_context_attention(a, b, c, sp=spu))),
+            argnums=(0, 1, 2)), qs, ks_, vs)
+    assert len(re.findall(r"all-to-all\(", txt)) == 4
+    gbudget = hybrid_context_budget("ulysses", 2, sp=1, b=B, hq=Hq,
+                                    hkv=Hkv, c=S // 2, dh=dh,
+                                    with_grad=True)
+    s = tape_summary(recs)
+    assert s["all-to-all_count"] == 4
+    assert s["total_bytes"] == gbudget.max_traffic["all-to-all"]
+
+
+@check("lasp2(comm=CommSpec) threads the spec; ulysses aliases allgather")
+def _():
+    import re
+
+    from repro.comm import CommSpec
+
+    o = jax.jit(lambda a, b, c, d: lasp2(
+        a, b, c, d, sp=sp, comm=CommSpec(strategy="ulysses")))(
+            q, k, v, log_a)
+    np.testing.assert_allclose(o, ref.o, rtol=3e-4, atol=3e-4)
+    # linear layers have no softmax heads to repartition: the ulysses
+    # state exchange IS LASP-2's packed allgather, budget unchanged
+    txt = compiled_hlo(lambda a, b, c, d: lasp2(
+        a, b, c, d, sp=sp, comm=CommSpec(strategy="ulysses")),
+        q, k, v, log_a)
+    assert len(re.findall(r"all-gather\(", txt)) == 1
+    assert not re.search(r"all-to-all\(", txt)
+    # a bf16 wire through the spec narrows the gather, same as the
+    # legacy comm_dtype kwarg
+    with tape() as recs:
+        jax.jit(lambda a, b, c, d: lasp2(
+            a, b, c, d, sp=sp, comm=CommSpec(dtype="bf16"))).lower(
+                q, k, v, log_a)
+    from repro.comm.budget import packed_state_bytes
+    assert tape_summary(recs)["total_bytes"] == \
+        (W - 1) * packed_state_bytes(B, H, dk, dv, "bf16")
+
+
 if __name__ == "__main__":
     print(f"ALL {len(PASSED)} COMM CHECKS PASSED")

@@ -6,10 +6,11 @@ with 512). Each check compares a sharded computation against its
 single-device oracle. Exits non-zero on the first failure.
 
 Mesh axis names come from ``repro.launch.mesh`` (the single source of
-truth): the SP batteries shard over ``SEQ_AXIS``, the 2D DP×SP battery
-runs on a ``(DATA_AXIS, SEQ_AXIS)`` mesh. ``REPRO_TEST_MESH=AxB``
-(dp×sp, default ``2x4``) picks the 2D battery's mesh split — the CI
-matrix sweeps ``8x1 | 4x2 | 2x4``.
+truth): the SP batteries shard over ``SEQ_AXIS``, the DP×SP(×TP)
+battery runs on a ``(DATA_AXIS, SEQ_AXIS[, MODEL_AXIS])`` mesh.
+``REPRO_TEST_MESH=AxB`` or ``AxBxC`` (dp×sp[×tp], default ``2x4``)
+picks that battery's mesh split — the CI matrix sweeps
+``8x1 | 4x2 | 2x4 | 2x2x2``.
 """
 
 import os
@@ -57,12 +58,16 @@ def check(name, section="base"):
 
 
 def _env_mesh():
-    """(dp, sp) split of the 2D battery, from REPRO_TEST_MESH=AxB."""
+    """(dp, sp, tp) split of the mesh battery, from
+    ``REPRO_TEST_MESH=AxB`` (tp defaults to 1) or ``AxBxC``."""
     raw = os.environ.get("REPRO_TEST_MESH", "2x4")
-    dp, sp = (int(x) for x in raw.lower().split("x"))
-    if dp * sp != 8:
-        raise SystemExit(f"REPRO_TEST_MESH={raw!r} must multiply to 8")
-    return dp, sp
+    parts = [int(x) for x in raw.lower().split("x")]
+    if len(parts) == 2:
+        parts.append(1)
+    if len(parts) != 3 or parts[0] * parts[1] * parts[2] != 8:
+        raise SystemExit(
+            f"REPRO_TEST_MESH={raw!r} must be AxB or AxBxC multiplying to 8")
+    return tuple(parts)
 
 
 mesh1d = make_sp_mesh(8)
@@ -463,29 +468,33 @@ def _():
     np.testing.assert_allclose(l_int, l_ref, rtol=2e-3, atol=2e-3)
 
 
-# --- 2D DP×SP training (data × sequence mesh, docs/parallelism.md) ----------
+# --- DP×SP(×TP) training (data × sequence × model mesh) ---------------------
 
+from repro.comm.spec import CommSpec                         # noqa: E402
 from repro.configs import get_smoke                          # noqa: E402
 from repro.configs.base import RunConfig                     # noqa: E402
 from repro.data.pipeline import SyntheticLM                  # noqa: E402
 from repro.sharding.rules import local_plan, make_plan       # noqa: E402
 from repro.train.step import init_state, make_train_step     # noqa: E402
 
-DP, SP = _env_mesh()
+DP, SP, TP = _env_mesh()
+_TAG = f"({DP},{SP})" if TP == 1 else f"({DP},{SP},{TP})"
 _cfg2d = get_smoke("linear-llama3-1b")
 _data2d = SyntheticLM(_cfg2d.vocab_size, 64, 8, seed=3)
 
 
-def _run_steps(dp, sp_deg, run, n_steps=3, zero1=True, comm_dtype="fp32"):
-    """Train ``n_steps`` on a (dp, sp) mesh; (1, 1) = single device."""
-    if (dp, sp_deg) == (1, 1):
+def _run_steps(dp, sp_deg, run, n_steps=3, zero1=True, comm_dtype="fp32",
+               tp=1):
+    """Train ``n_steps`` on a (dp, sp[, tp]) mesh; (1, 1) = single device."""
+    if (dp, sp_deg, tp) == (1, 1, 1):
         plan = local_plan()
         mesh = None
     else:
-        mesh = make_training_mesh(dp, sp_deg)
+        mesh = make_training_mesh(dp, sp_deg, tp)
         plan = make_plan(mesh, "train", global_batch=8,
-                         n_kv_heads=_cfg2d.n_kv_heads, zero1=zero1,
-                         comm_dtype=comm_dtype)
+                         n_kv_heads=_cfg2d.n_kv_heads,
+                         n_heads=_cfg2d.n_heads, zero1=zero1,
+                         comm=CommSpec(dtype=comm_dtype))
     state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
     step = jax.jit(make_train_step(_cfg2d, run, plan))
     losses = []
@@ -501,49 +510,50 @@ _RUN2D = RunConfig(num_microbatches=_A2D, remat="none", total_steps=10,
                    warmup_steps=2, learning_rate=1e-3)
 
 
-@check(f"({DP},{SP}) DP×SP == (1,8) SP-only == single device (3-step loss)", section="2d")
+@check(f"{_TAG} DP×SP(×TP) == (1,8) SP-only == single device (3-step loss)", section="2d")
 def _():
     _, l_ref = _run_steps(1, 1, _RUN2D)
     _, l_sp = _run_steps(1, 8, _RUN2D)
-    _, l_2d = _run_steps(DP, SP, _RUN2D)
+    _, l_2d = _run_steps(DP, SP, _RUN2D, tp=TP)
     # same global batch, same math — only the reduction grouping differs
     np.testing.assert_allclose(l_2d, l_sp, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(l_2d, l_ref, rtol=2e-3, atol=2e-3)
 
 
-@check(f"--comm-dtype bf16 loss trajectory ~= fp32 on ({DP},{SP})", section="2d")
+@check(f"--comm-dtype bf16 loss trajectory ~= fp32 on {_TAG}", section="2d")
 def _():
     """Training with bf16 exchange payloads tracks the fp32-wire loss:
     the wire dtype only rounds the state gathers (combines stay fp32),
     so a 3-step trajectory stays within bf16 payload tolerance — the
     sanity check behind shipping --comm-dtype bf16 as a perf knob."""
-    _, l_fp32 = _run_steps(DP, SP, _RUN2D)
-    _, l_bf16 = _run_steps(DP, SP, _RUN2D, comm_dtype="bf16")
+    _, l_fp32 = _run_steps(DP, SP, _RUN2D, tp=TP)
+    _, l_bf16 = _run_steps(DP, SP, _RUN2D, comm_dtype="bf16", tp=TP)
     np.testing.assert_allclose(l_bf16, l_fp32, rtol=2e-2, atol=2e-2)
-    if SP == 1:
+    if SP * TP == 1:
         # no sequence sharding → no SP exchange → bit-identical
         np.testing.assert_allclose(l_bf16, l_fp32, rtol=0, atol=0)
 
 
-@check(f"ZeRO-1 sharded AdamW == replicated AdamW on ({DP},{SP})", section="2d")
+@check(f"ZeRO-1 sharded AdamW == replicated AdamW on {_TAG}", section="2d")
 def _():
-    s_z, l_z = _run_steps(DP, SP, _RUN2D, n_steps=2, zero1=True)
-    s_r, l_r = _run_steps(DP, SP, _RUN2D, n_steps=2, zero1=False)
+    s_z, l_z = _run_steps(DP, SP, _RUN2D, n_steps=2, zero1=True, tp=TP)
+    s_r, l_r = _run_steps(DP, SP, _RUN2D, n_steps=2, zero1=False, tp=TP)
     np.testing.assert_allclose(l_z, l_r, rtol=1e-6, atol=1e-6)
     for a, b in zip(jax.tree.leaves(s_z["params"]),
                     jax.tree.leaves(s_r["params"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-7)
-    if DP > 1:
+    if DP * TP > 1:
         from repro.optim.adamw import Zero1AdamState
         assert isinstance(s_z["opt"], Zero1AdamState)
 
 
-@check(f"non-finite step skipped on ({DP},{SP}): params+opt.count frozen", section="2d")
+@check(f"non-finite step skipped on {_TAG}: params+opt.count frozen", section="2d")
 def _():
-    mesh = make_training_mesh(DP, SP)
+    mesh = make_training_mesh(DP, SP, TP)
     plan = make_plan(mesh, "train", global_batch=8,
-                     n_kv_heads=_cfg2d.n_kv_heads)
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
     state = init_state(jax.random.PRNGKey(0), _cfg2d, _RUN2D, plan)
     step = jax.jit(make_train_step(_cfg2d, _RUN2D, plan))
     state["params"]["embed"]["table"] = \
@@ -557,15 +567,16 @@ def _():
         "skipped step must not advance the Adam step count"
 
 
-@check(f"({DP},{SP}) step HLO: per-axis collective budget holds exactly", section="2d")
+@check(f"{_TAG} step HLO: per-axis collective budget holds exactly", section="2d")
 def _():
     from repro.comm.budget import (assert_axis_budget,
                                    train_step_axis_budget)
     run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
                     warmup_steps=2, scan_unroll=True)
-    mesh = make_training_mesh(DP, SP)
+    mesh = make_training_mesh(DP, SP, TP)
     plan = make_plan(mesh, "train", global_batch=8,
-                     n_kv_heads=_cfg2d.n_kv_heads)
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
     state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
     step = make_train_step(_cfg2d, run, plan)
     txt = jax.jit(step).lower(
@@ -579,7 +590,7 @@ def _():
     assert_axis_budget(txt, mesh, budget)
 
 
-@check(f"({DP},{SP}) flight recorder: tape == expected bytes, drift flags",
+@check(f"{_TAG} flight recorder: tape == expected bytes, drift flags",
        section="2d")
 def _():
     """The compile-time flight recorder (docs/observability.md) on a
@@ -594,9 +605,10 @@ def _():
 
     run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
                     warmup_steps=2)
-    mesh = make_training_mesh(DP, SP)
+    mesh = make_training_mesh(DP, SP, TP)
     plan = make_plan(mesh, "train", global_batch=8,
-                     n_kv_heads=_cfg2d.n_kv_heads)
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
     state = init_state(jax.random.PRNGKey(0), _cfg2d, run, plan)
     step = jax.jit(make_train_step(_cfg2d, run, plan))
     with tape() as records:
@@ -626,7 +638,7 @@ def _():
         "injected tape record must flag drift"
 
 
-@check(f"({DP},{SP}) instrumented train: step records on the 2D mesh",
+@check(f"{_TAG} instrumented train: step records on the training mesh",
        section="2d")
 def _():
     """train(sink=...) on the DP×SP mesh: the AOT-compiled instrumented
@@ -635,9 +647,10 @@ def _():
     from repro.obs import InMemorySink
     from repro.train.loop import train
 
-    mesh = make_training_mesh(DP, SP)
+    mesh = make_training_mesh(DP, SP, TP)
     plan = make_plan(mesh, "train", global_batch=8,
-                     n_kv_heads=_cfg2d.n_kv_heads)
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
     sink = InMemorySink()
     kw = dict(log_every=10 ** 9, log_fn=lambda *_: None, max_steps=2)
     _, hist = train(_cfg2d, _RUN2D, _data2d, plan=plan, sink=sink, **kw)
@@ -657,7 +670,7 @@ def _():
         assert r["tokens"] == 8 * 64
 
 
-@check(f"({DP},{SP}) compiled-program sanitizer: SAN201-205 clean",
+@check(f"{_TAG} compiled-program sanitizer: SAN201-205 clean",
        section="2d")
 def _():
     """The static-analysis layer-2 invariants (docs/static_analysis.md)
@@ -665,8 +678,166 @@ def _():
     the sequence-axis wire, donation aliased, deterministic lowering."""
     from repro.analysis.sanitizer import sanitize_train_step
 
-    findings = sanitize_train_step(DP, SP, comm_dtype="bf16")
+    findings = sanitize_train_step(DP, SP, TP, comm_dtype="bf16")
     assert not findings, "\n".join(str(f) for f in findings)
+
+
+# --- 3D DP×SP×TP + ulysses head-parallel All-to-All (docs/parallelism.md) ---
+# Fixed (1,4,2)/(2,2,2) meshes independent of the env split, so these run
+# once (base section) on the default leg; the 2x2x2 CI leg re-runs the
+# whole mesh-split-dependent section above on a real 3D mesh.
+
+from repro.configs.base import (LayerSpec, LinearAttnConfig,  # noqa: E402
+                                ModelConfig)
+
+_cfg3d = ModelConfig(
+    name="hybrid-smoke", family="hybrid", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=160, vocab_size=512,
+    pattern=(LayerSpec(mixer="linear"), LayerSpec(mixer="softmax")),
+    linear_attn=LinearAttnConfig(feature_map="identity", decay="none"))
+_data3d = SyntheticLM(_cfg3d.vocab_size, 64, 8, seed=5)
+_RUN3D = RunConfig(num_microbatches=1, remat="none", total_steps=10,
+                   warmup_steps=2, learning_rate=1e-3)
+
+
+def _plan3d(dims, strategy="allgather"):
+    mesh = make_training_mesh(*dims)
+    return mesh, make_plan(mesh, "train", global_batch=8,
+                           n_kv_heads=_cfg3d.n_kv_heads,
+                           n_heads=_cfg3d.n_heads,
+                           comm=CommSpec(strategy=strategy))
+
+
+def _run_hybrid(dims, strategy="allgather", n_steps=3):
+    if dims == (1, 1, 1):
+        plan = local_plan()
+    else:
+        _, plan = _plan3d(dims, strategy)
+    state = init_state(jax.random.PRNGKey(0), _cfg3d, _RUN3D, plan)
+    step = jax.jit(make_train_step(_cfg3d, _RUN3D, plan))
+    losses = []
+    for i in range(n_steps):
+        state, m = step(state, _data3d.microbatched(i, 1))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+@check("3D ulysses (1,4,2)/(2,2,2) == (1,8,1) allgather == single device")
+def _():
+    """The tentpole parity proof: the hybrid model trains identically
+    whether the softmax layers reach full-sequence context by gathering
+    K/V over the sequence axis (allgather CP) or by All-to-All head
+    repartition over the model axis (ulysses), through autodiff, on
+    every verified 3D split — and both match the single-device oracle."""
+    l_ref = _run_hybrid((1, 1, 1))
+    l_ag = _run_hybrid((1, 8, 1), "allgather")
+    np.testing.assert_allclose(l_ag, l_ref, rtol=2e-3, atol=2e-3)
+    for dims in ((1, 4, 2), (2, 2, 2)):
+        l_u = _run_hybrid(dims, "ulysses")
+        np.testing.assert_allclose(l_u, l_ag, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(l_u, l_ref, rtol=2e-3, atol=2e-3)
+
+
+@check("ulysses fwd HLO: exactly 2 model-axis All-to-Alls per hybrid layer")
+def _():
+    """Forward-only lowering of the hybrid model under the (1,4,2)
+    ulysses plan: the one hybrid layer costs exactly two model-axis
+    All-to-Alls (seq→head in, head→seq out) — no gathers or permutes
+    ride along on the model axis."""
+    from repro.launch.hlo_analysis import collective_axis_counts
+    from repro.models import model as M
+
+    mesh, plan = _plan3d((1, 4, 2), "ulysses")
+    params = M.init_params(jax.random.PRNGKey(0), _cfg3d)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
+                                _cfg3d.vocab_size)
+
+    def fwd(p, t):
+        logits, _ = M.forward(p, t, _cfg3d, plan, remat="none")
+        return logits
+
+    txt = jax.jit(_shard_map(
+        fwd, mesh=mesh, in_specs=(P(), P(None, (SEQ_AXIS, MODEL_AXIS))),
+        out_specs=P(None, (SEQ_AXIS, MODEL_AXIS), None),
+        axis_names=set(plan.manual_axes),
+        check_vma=False)).lower(params, tokens).compile().as_text()
+    counts = collective_axis_counts(txt, mesh)
+    n_hybrid = sum(1 for s in _cfg3d.pattern if s.mixer == "softmax")
+    assert counts.get(("all-to-all", (MODEL_AXIS,)), 0) == 2 * n_hybrid, \
+        counts
+    # model-ONLY traffic is the a2a pair and nothing else (the linear
+    # layer's state gather spans the combined (sequence, model) token
+    # axis — that is sequence-parallel traffic, not head-parallel)
+    for (op, axes), n in counts.items():
+        if axes == (MODEL_AXIS,) and op != "all-to-all":
+            raise AssertionError(
+                f"unexpected model-axis collective {op} x{n}: {counts}")
+
+
+@check("3D ulysses step HLO: per-axis budget holds on (1,4,2) + (2,2,2)")
+def _():
+    """Full train-step per-axis ceiling on both CI-verified 3D splits:
+    4 model-axis All-to-Alls per hybrid layer per step (2 fwd + 2 bwd
+    from the mirrored custom_vjp pair), the linear layers' gathers on
+    the combined (sequence, model) token axis, ZeRO-1 over
+    (data, model) — nothing else."""
+    from repro.comm.budget import (assert_axis_budget,
+                                   train_step_axis_budget)
+    from repro.launch.hlo_analysis import collective_axis_counts
+
+    run = RunConfig(num_microbatches=1, remat="none", total_steps=10,
+                    warmup_steps=2, scan_unroll=True)
+    for dims in ((1, 4, 2), (2, 2, 2)):
+        mesh, plan = _plan3d(dims, "ulysses")
+        state = init_state(jax.random.PRNGKey(0), _cfg3d, run, plan)
+        txt = jax.jit(make_train_step(_cfg3d, run, plan)).lower(
+            state, _data3d.microbatched(0, 1)).compile().as_text()
+        budget = train_step_axis_budget(
+            mesh, n_sp_layers=1, n_hybrid_layers=1,
+            comm_strategy="ulysses", microbatches=1,
+            backward="autodiff", zero1=plan.zero1_axis is not None)
+        assert_axis_budget(txt, mesh, budget)
+        counts = collective_axis_counts(txt, mesh)
+        assert counts.get(("all-to-all", (MODEL_AXIS,)), 0) == 4, \
+            (dims, counts)
+
+
+@check("ulysses hybrid wire bytes < allgather K/V bytes at tp=2 (tape)")
+def _():
+    """The reason ulysses exists: on the (2,2,2) split the hybrid
+    layer's forward exchange (2 All-to-Alls + the residual 2-wide K/V
+    sequence gathers) moves fewer wire bytes than gathering K/V across
+    all 4 context ranks. Forward-only lowerings so both tapes cover the
+    same legs (allgather's autodiff backward is JAX-generated, untaped).
+    Holds at the smoke config's 2:1 GQA ratio — see
+    docs/communication.md for where extreme GQA flips it."""
+    from repro.comm import tape
+    from repro.models import model as M
+
+    params = M.init_params(jax.random.PRNGKey(0), _cfg3d)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
+                                _cfg3d.vocab_size)
+
+    def hybrid_bytes(strategy, prefix):
+        mesh, plan = _plan3d((2, 2, 2), strategy)
+
+        def fwd(p, t):
+            logits, _ = M.forward(p, t, _cfg3d, plan, remat="none")
+            return logits
+
+        with tape() as recs:
+            jax.jit(_shard_map(
+                fwd, mesh=mesh,
+                in_specs=(P(), P(DATA_AXIS, (SEQ_AXIS, MODEL_AXIS))),
+                out_specs=P(DATA_AXIS, (SEQ_AXIS, MODEL_AXIS), None),
+                axis_names=set(plan.manual_axes),
+                check_vma=False)).lower(params, tokens)
+        return sum(r.traffic_bytes for r in recs
+                   if r.tag.startswith(prefix))
+
+    uly = hybrid_bytes("ulysses", "ulysses.")
+    ag = hybrid_bytes("allgather", "lasp2h.")
+    assert 0 < uly < ag, (uly, ag)
 
 
 if __name__ == "__main__":

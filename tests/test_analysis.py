@@ -18,7 +18,7 @@ from repro.analysis.lint import (discover_files, lint_file,
                                  load_suppressions, run_lint)
 from repro.analysis.rules import explain
 from repro.analysis.sanitizer import check_determinism, sanitize_text
-from repro.launch.mesh import DATA_AXIS, SEQ_AXIS
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, SEQ_AXIS
 
 ROOT = Path(__file__).resolve().parent.parent
 
@@ -67,6 +67,28 @@ with timer.phase("sequence"):
 g(decay="model")
 '''
     assert _lint(denied, ["JL101"]) == []
+
+
+def test_jl101_model_axis_is_live():
+    """Since the 3D DP×SP×TP mesh landed, MODEL_AXIS carries real
+    ulysses traffic: a raw "model" literal in mesh/spec positions is a
+    budget-classification hazard, the constant is the clean spelling,
+    and the rule's explanation says so."""
+    bad = '''
+mesh = make_training_mesh(2, 2, 2)
+spec = P(None, ("sequence", "model"))
+deg = mesh.shape["model"]
+'''
+    assert _codes(_lint(bad, ["JL101"])) == ["JL101"] * 3
+    clean = '''
+from repro.launch.mesh import MODEL_AXIS, SEQ_AXIS
+
+mesh = make_training_mesh(2, 2, 2)
+spec = P(None, (SEQ_AXIS, MODEL_AXIS))
+deg = mesh.shape[MODEL_AXIS]
+'''
+    assert _lint(clean, ["JL101"]) == []
+    assert "LIVE training axis" in explain("JL101")
 
 
 # --- JL102: host syncs in traced hot-path modules --------------------------
@@ -391,6 +413,59 @@ def test_san203_vacuous_program_flagged():
     out = sanitize_text("fx", lowered_text="module @jit_step {}",
                         mesh=_FakeMesh(), comm_dtype="bf16")
     assert _codes(out) == ["SAN203"] and "vacuous" in out[0].message
+
+
+class _FakeMesh3D:
+    """A (2, 2, 2) (DATA, SEQ, MODEL) mesh: device (d, s, m) = d*4+s*2+m."""
+
+    axis_names = (DATA_AXIS, SEQ_AXIS, MODEL_AXIS)
+    shape = {DATA_AXIS: 2, SEQ_AXIS: 2, MODEL_AXIS: 2}
+
+    @property
+    def devices(self):
+        return np.array([[[_FakeDev(d * 4 + s * 2 + m) for m in range(2)]
+                          for s in range(2)] for d in range(2)])
+
+
+def _stablehlo_3d(gather_dtype, a2a_dtype="f32"):
+    # the ulysses hybrid layer on the 3D mesh: a model-axis All-to-All
+    # (head repartition, compute-dtype wire by design), the linear
+    # layers' state gather over the COMBINED (seq, model) token axis
+    # (comm_dtype contract), and the ZeRO-1 (data, model) param gather
+    # (fp32 by design, exempt)
+    return f"""\
+module @jit_step {{
+  func.func public @main(%arg0: tensor<4x8x16x16x{a2a_dtype}>) {{
+    %0 = "stablehlo.all_to_all"(%arg0) <{{split_dimension = 1 : i64,
+      concat_dimension = 2 : i64, split_count = 2 : i64,
+      replica_groups = dense<[[0, 1], [2, 3], [4, 5], [6, 7]]> :
+      tensor<4x2xi64>}}> : (tensor<4x8x16x16x{a2a_dtype}>) ->
+      tensor<4x4x32x16x{a2a_dtype}>
+    %1 = "stablehlo.all_gather"(%arg1) <{{all_gather_dim = 0 : i64,
+      replica_groups = dense<[[0, 1, 2, 3], [4, 5, 6, 7]]> :
+      tensor<2x4xi64>}}> : (tensor<1x4x4x257x{gather_dtype}>) ->
+      tensor<4x4x4x257x{gather_dtype}>
+    %2 = "stablehlo.all_gather"(%arg2) <{{replica_groups =
+      dense<[[0, 1, 4, 5], [2, 3, 6, 7]]> : tensor<2x4xi64>}}> :
+      (tensor<80032xf32>) -> tensor<320128xf32>
+    return
+  }}
+}}
+"""
+
+
+def test_san203_3d_model_axis_alltoall_legitimate():
+    """On the 3D ulysses mesh the model-axis All-to-All is the head
+    repartition — a legitimate mixed-dtype wire, never a SAN203 hit —
+    while the combined (seq, model) token-axis gather IS the sequence
+    wire: it satisfies the vacuity check and must honor comm_dtype."""
+    # bf16 combined gather + f32 model a2a: clean under comm_dtype=bf16
+    assert sanitize_text("fx", lowered_text=_stablehlo_3d("bf16"),
+                         mesh=_FakeMesh3D(), comm_dtype="bf16") == []
+    # the combined-axis gather regressing to f32 still flags
+    out = sanitize_text("fx", lowered_text=_stablehlo_3d("f32"),
+                        mesh=_FakeMesh3D(), comm_dtype="bf16")
+    assert _codes(out) == ["SAN203"] and "carries f32" in out[0].message
 
 
 def test_san205_fingerprint_drift_flagged():
