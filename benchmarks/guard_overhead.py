@@ -1,0 +1,129 @@
+"""Guard-overhead A/B: the manual (2, 4) DP×SP train step with the
+in-graph numerical health guard ON vs OFF.
+
+The guard's design claim (docs/resilience.md) is that it is free: the
+health scalar rides the existing packed gradient all-reduce, so the
+collective count is UNCHANGED (asserted by ``assert_axis_budget`` in
+tests/distributed_checks.py), and gradient non-finiteness is detected on
+the already-computed post-reduce gnorm — no extra pass over the raveled
+gradients. This bench pins the compute side of that claim two ways:
+
+* **deterministic** — XLA ``cost_analysis`` flops and bytes-accessed of
+  the two compiled steps. These are exactly reproducible, and the
+  committed baseline's ``gate_ceilings`` pin the guard's overhead on
+  both at 2% (``scripts/bench_gate.py`` fails any PR that grows the
+  guarded program past that). The measured overhead is ~0.001% — a NaN
+  check that costs a full isfinite sweep over the gradient vector shows
+  up here as ~5% bytes and trips the gate.
+* **indicative** — paired wall-clock medians (plain and guard sampled
+  back-to-back so host-load drift lands on both sides of each pair).
+  On this 1-core CPU container the run-to-run wall noise is far above
+  the 2% bound, so ``guard_overhead_pct`` is reported but only the
+  per-variant ``median_us`` rows gate (baseline-relative, at CI's wide
+  ``--wall-tol``); the hard 2% ceiling rides on the deterministic
+  compiled-cost metrics above.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_subprocess_bench, write_bench_json
+
+BENCH_NAME = "guard"
+
+_CODE = r"""
+import json, time
+import jax
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_training_mesh
+from repro.sharding.rules import make_plan
+from repro.train.step import init_state, make_train_step
+from benchmarks.common import percentile
+
+cfg = get_smoke("linear-llama3-1b")
+data = SyntheticLM(cfg.vocab_size, 64, 8, seed=3)
+mesh = make_training_mesh(2, 4)
+batch = data.microbatched(0, 1)
+
+def build(guard):
+    run = RunConfig(num_microbatches=1, remat="none", total_steps=200,
+                    warmup_steps=2, scan_unroll=True, guard=guard)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
+                     comm=run.comm_spec(), zero1=run.zero1)
+    state = init_state(jax.random.PRNGKey(0), cfg, run, plan)
+    compiled = jax.jit(make_train_step(cfg, run, plan),
+                       donate_argnums=(0,)).lower(state, batch).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    cost = {"flops": float(ca.get("flops", 0.0)),
+            "cost_bytes": float(ca.get("bytes accessed", 0.0))}
+    for _ in range(3):   # warmup (compile already done)
+        state, m = compiled(state, batch)
+    jax.block_until_ready(m)
+    return [compiled, state, cost]
+
+PAIRS, CALLS = 30, 2
+variants = {"plain": build(False), "guard": build(True)}
+times = {k: [] for k in variants}
+
+def sample(v):
+    step, state = v[0], v[1]
+    t0 = time.perf_counter()
+    for _ in range(CALLS):
+        state, m = step(state, batch)
+    jax.block_until_ready(m)
+    v[1] = state
+    return (time.perf_counter() - t0) / CALLS * 1e6
+
+# Paired A/B: plain and guard are sampled back-to-back so host-load
+# drift (this is a 1-core container time-slicing 8 virtual devices)
+# lands on both sides of each pair; the wall statistic is the median of
+# per-pair ratios, which a slow patch of wall-clock shifts far less
+# than a difference of independent medians.
+ratios = []
+for _ in range(PAIRS):
+    p = sample(variants["plain"])
+    g = sample(variants["guard"])
+    times["plain"].append(p)
+    times["guard"].append(g)
+    ratios.append(g / p - 1.0)
+
+cost = {k: v[2] for k, v in variants.items()}
+def pct(key):
+    return (cost["guard"][key] / cost["plain"][key] - 1.0) * 100.0
+
+payload = {
+    "mesh": "2x4",
+    "rows": [
+        {"name": f"train_step_2x4_{k}", "median_us": percentile(ts, 50),
+         "p90_us": percentile(ts, 90), "iters": len(ts) * CALLS,
+         **cost[k]}
+        for k, ts in times.items()],
+    "guard_overhead_pct": percentile(ratios, 50) * 100.0,
+    "guard_flops_overhead_pct": pct("flops"),
+    "guard_cost_bytes_overhead_pct": pct("cost_bytes"),
+    "gate_ceilings": {"guard_flops_overhead_pct": 2.0,
+                      "guard_cost_bytes_overhead_pct": 2.0},
+}
+print(json.dumps(payload))
+"""
+
+
+def main():
+    payload = run_subprocess_bench(_CODE, devices=8)
+    med = {r["name"]: r["median_us"] for r in payload["rows"]}
+    emit([(name, us, "") for name, us in med.items()])
+    emit([("guard_overhead_wall", 0.0,
+           f"{payload['guard_overhead_pct']:+.2f}% (indicative)"),
+          ("guard_overhead_flops", 0.0,
+           f"{payload['guard_flops_overhead_pct']:+.4f}%"),
+          ("guard_overhead_bytes", 0.0,
+           f"{payload['guard_cost_bytes_overhead_pct']:+.4f}%")])
+    return payload
+
+
+if __name__ == "__main__":
+    write_bench_json(BENCH_NAME, main())

@@ -20,7 +20,8 @@ import traceback
 
 from benchmarks.common import write_bench_json
 
-BENCHES = ["fig3_speed", "comm_strategies", "kernels", "serve_throughput",
+BENCHES = ["fig3_speed", "comm_strategies", "kernels", "guard_overhead",
+           "serve_throughput",
            "table2_convergence", "table3_bidirectional",
            "table4_hybrid_ratio", "table5_gather_splits",
            "table6_scalability"]

@@ -14,6 +14,12 @@ closes the loop:
   /``*_count``/``*_steps`` counter ABOVE its baseline fails outright
   (these are deterministic; an increase means the comm structure
   regressed).
+* **absolute ceilings** — a baseline payload may carry a top-level
+  ``gate_ceilings: {"<flattened metric path>": <max>}`` map; the
+  current run's value at each path must not exceed the ceiling. This
+  gates derived quantities that have a hard acceptance bound rather
+  than a baseline-relative one (e.g. ``BENCH_guard.json`` pins
+  ``guard_overhead_pct`` at 2%).
 
 Rows inside ``rows``/``cases`` lists are matched by their ``name`` field,
 so reordering does not break the diff; metrics present only in the
@@ -80,8 +86,26 @@ def _classify(path: str):
 
 def gate_one(name: str, baseline: dict, current: dict, *, wall_tol: float,
              wall_floor_us: float, allow_missing: bool):
+    # ceilings are read from the COMMITTED baseline (so a regressing PR
+    # can't relax the bound by editing its own fresh payload) and
+    # stripped from both sides before flattening — they are gate config,
+    # not metrics.
+    ceilings = baseline.pop("gate_ceilings", None) or {}
+    current.pop("gate_ceilings", None)
     base, cur = _flatten(baseline), _flatten(current)
     failures, checked = [], 0
+    for path, ceiling in sorted(ceilings.items()):
+        if path not in cur:
+            if not allow_missing:
+                failures.append(
+                    f"{name}: ceiling metric {path} missing from "
+                    f"current run")
+            continue
+        checked += 1
+        if cur[path] > float(ceiling):
+            failures.append(
+                f"{name}: {path} = {cur[path]:.3f} exceeds ceiling "
+                f"{float(ceiling):.3f}")
     for path, bval in base.items():
         kind = _classify(path)
         if kind is None:

@@ -14,14 +14,22 @@ covers, when the matching records are present:
   summary (queue depth, cache occupancy, eviction counters);
 * **events / summary** — resume/signal/straggler events and run totals.
 
-Also renders the static-analysis findings document that
-``python -m repro.analysis --json`` writes (a single JSON object with a
-``findings`` key, docs/static_analysis.md) — the CI ``analysis`` job
-feeds its artifact through here.
+Guarded runs (``--guard``, docs/resilience.md) additionally get a
+numerical-guard table (skipped / spike-clipped steps, rolling median)
+and their ``guard_skip`` / ``guard_abort`` / ``ckpt_fallback`` events
+land in the events table.
+
+Also renders two single-object JSON documents: the static-analysis
+findings that ``python -m repro.analysis --json`` writes (a JSON object
+with a ``findings`` key, docs/static_analysis.md), and the chaos-drill
+report that ``python -m repro.resilience.drill --out`` writes
+(``kind: chaos_drill``, docs/resilience.md) — the CI ``analysis`` and
+``chaos`` jobs feed their artifacts through here.
 
   python scripts/report.py metrics.jsonl              # stdout
   python scripts/report.py metrics.jsonl -o report.md
   python scripts/report.py analysis_findings.json -o analysis_report.md
+  python scripts/report.py drill_report.json -o drill_report.md
 """
 
 from __future__ import annotations
@@ -140,6 +148,26 @@ def render(records) -> str:
         else:
             lines += ["no straggler steps flagged.", ""]
 
+        guarded = [r for r in steps if "skipped_steps" in r]
+        if guarded:
+            last = guarded[-1]
+            skipped_at = [r.get("step") for r in steps if r.get("skipped")]
+            spiked_at = [r.get("step") for r in steps
+                         if r.get("guard_spike")]
+            lines += ["### Numerical guard", ""]
+            lines += _table(
+                ["metric", "value"],
+                [("steps skipped", int(last.get("skipped_steps", 0))),
+                 ("skipped at",
+                  ", ".join(str(s) for s in skipped_at) or "-"),
+                 ("spike-clipped at",
+                  ", ".join(str(s) for s in spiked_at) or "-"),
+                 ("max consecutive skips",
+                  int(max((r.get("consecutive_skips", 0)
+                           for r in guarded), default=0))),
+                 ("rolling median ‖g‖ (final)",
+                  last.get("guard_median"))]) + [""]
+
         comm = [r for r in steps if "expected_collective_bytes" in r]
         if comm:
             r = comm[-1]
@@ -189,6 +217,45 @@ def render(records) -> str:
     return "\n".join(lines).rstrip() + "\n"
 
 
+def _detail_cell(detail: dict) -> str:
+    """Compact scalar/short-list view of a drill finding's detail."""
+    parts = []
+    for k, v in sorted((detail or {}).items()):
+        if isinstance(v, dict):
+            continue
+        if isinstance(v, list):
+            if len(v) > 6 or any(isinstance(x, (dict, list)) for x in v):
+                continue
+            v = "[" + ", ".join(_fmt(x) for x in v) + "]"
+        parts.append(f"{k}={_fmt(v)}")
+    return "; ".join(parts) or "-"
+
+
+def render_drill(doc: dict) -> str:
+    """Markdown for a ``python -m repro.resilience.drill --out`` report."""
+    findings = doc.get("findings") or []
+    n_ok = sum(bool(f.get("ok")) for f in findings)
+    lines = ["# Chaos drill report", "",
+             ("**PASS**" if doc.get("passed") else "**FAIL**")
+             + f" — {n_ok}/{len(findings)} findings on the "
+             f"{doc.get('mesh', '?')} mesh (loss-parity rtol "
+             f"{_fmt(doc.get('rtol'))})", ""]
+    lines += _table(
+        ["finding", "ok", "detail"],
+        [(f.get("name"), "✓" if f.get("ok") else "✗ FAIL",
+          _detail_cell(f.get("detail"))) for f in findings]) + [""]
+    fallbacks = [e for f in findings
+                 for e in (f.get("detail") or {}).get("fallback_events", [])]
+    if fallbacks:
+        lines += ["## Checkpoint fallbacks", ""]
+        lines += _table(
+            ["bad step", "restored step", "rejected", "error"],
+            [(e.get("bad_step"), e.get("restored_step"),
+              _fmt(str(e.get("rejected", "-"))),
+              str(e.get("error", "-"))[:80]) for e in fallbacks]) + [""]
+    return "\n".join(lines).rstrip() + "\n"
+
+
 def render_analysis(doc: dict) -> str:
     """Markdown for a ``python -m repro.analysis --json`` document."""
     checked = ", ".join(f"{v} {k}" for k, v in sorted(
@@ -235,7 +302,10 @@ def main():
             doc = json.load(f)
     except (json.JSONDecodeError, UnicodeDecodeError):
         pass
-    if isinstance(doc, dict) and "findings" in doc:
+    if isinstance(doc, dict) and doc.get("kind") == "chaos_drill":
+        md = render_drill(doc)
+        records = [doc]
+    elif isinstance(doc, dict) and "findings" in doc:
         md = render_analysis(doc)
         records = [doc]
     else:

@@ -1,26 +1,57 @@
-"""Checkpointing: atomic, async, keep-k, mesh-independent (elastic resume).
+"""Checkpointing: atomic, async, verified, keep-k, mesh-independent.
 
-Layout: ``<dir>/step_<n>/`` containing ``manifest.json`` (tree structure,
-shapes, dtypes) and ``arrays.npz``. Arrays are saved as host numpy in a
-fully-replicated layout, so a checkpoint written on one mesh can be
-restored onto any other mesh/devices count — the loader re-shards with
-whatever shardings the new run provides (tested in tests/test_checkpoint).
+Layout: ``<dir>/step_<n>/`` containing ``manifest.json`` (tree paths,
+shapes, dtypes, per-array SHA-256 checksums) and ``arrays.npz``. Arrays
+are saved as host numpy in a fully-replicated layout, so a checkpoint
+written on one mesh can be restored onto any other mesh/device count —
+the loader re-shards with whatever shardings the new run provides
+(tested in tests/test_data_checkpoint.py).
 
-Writes are atomic (tmp dir + ``os.replace``) so a crash mid-save never
-corrupts the latest checkpoint; ``save_async`` offloads the host transfer
-+ serialization to a daemon thread so the train loop keeps stepping.
+Hardening (docs/resilience.md):
+
+* writes are atomic: tmp dir + fsync(arrays, manifest, tmp dir) +
+  ``os.replace`` + fsync(parent) — a crash at ANY point leaves either
+  the old checkpoint or the new one, never a torn directory;
+* transient ``OSError`` during a write is retried with backoff
+  (``retries``/``backoff_s``) before surfacing;
+* ``save_async`` captures exceptions from the writer thread and
+  re-raises them on ``wait()`` or the next ``save_async`` — they are
+  never silently dropped;
+* ``restore`` verifies the per-array checksums (``verify=True``) and
+  raises :class:`CheckpointCorruptError` with the offending arrays, and
+  a clear error (not a raw ``np.load`` traceback) on missing/truncated
+  files; :meth:`restore_latest_valid` walks checkpoints newest-first
+  and returns the first one that restores cleanly;
+* leaves are addressed by tree path (``manifest["paths"]``), so a
+  SUBTREE restore — e.g. ``{"params": ...}`` for serving — picks the
+  right arrays regardless of flatten order (index-based pre-v2
+  manifests restore with the old positional rule).
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
+import time
+import zipfile
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+MANIFEST_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written or restored."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint directory exists but its contents are unreadable or
+    fail checksum verification (truncated write, bit rot, tampering)."""
 
 
 def _flatten(tree):
@@ -28,54 +59,117 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def _sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, *,
+                 verify: bool = True, retries: int = 3,
+                 backoff_s: float = 0.05):
         self.dir = directory
         self.keep = keep
+        self.verify = verify
+        self.retries = retries
+        self.backoff_s = backoff_s
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # seam for fault injection (repro.resilience.chaos / tests):
+        # instance-assignable array writer
+        self._savez = np.savez
 
     # -- write --------------------------------------------------------------
 
     def save(self, step: int, tree: Any):
-        leaves, treedef = _flatten(tree)
+        paths, leaves, _ = _flatten_with_paths(tree)
         host = [np.asarray(jax.device_get(l)) for l in leaves]
-        self._write(step, host, treedef)
+        self._write_with_retry(step, host, paths)
 
     def save_async(self, step: int, tree: Any):
         """Device→host copy happens synchronously (cheap, avoids racing the
-        next update-in-place); disk serialization runs on a thread."""
-        leaves, treedef = _flatten(tree)
+        next update-in-place); disk serialization runs on a thread. An
+        exception from the PREVIOUS async write re-raises here (or on
+        ``wait()``) — async failures are never dropped."""
+        paths, leaves, _ = _flatten_with_paths(tree)
         host = [np.asarray(jax.device_get(l)) for l in leaves]
         self.wait()
         self._thread = threading.Thread(
-            target=self._write, args=(step, host, treedef), daemon=True)
+            target=self._write_safe, args=(step, host, paths), daemon=True)
         self._thread.start()
 
     def wait(self):
+        """Join the in-flight async write; re-raise its exception if it
+        failed (the error is cleared, so a later save can proceed)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
-    def _write(self, step: int, host_leaves, treedef):
+    def _write_safe(self, step: int, host_leaves, paths):
+        try:
+            self._write_with_retry(step, host_leaves, paths)
+        except BaseException as e:    # surfaced from wait()/next save_async
+            self._error = e
+
+    def _write_with_retry(self, step: int, host_leaves, paths):
+        for attempt in range(self.retries + 1):
+            try:
+                return self._write(step, host_leaves, paths)
+            except OSError:
+                if attempt >= self.retries:
+                    raise
+                time.sleep(self.backoff_s * (2 ** attempt))
+
+    def _write(self, step: int, host_leaves, paths):
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{f"a{i}": l for i, l in enumerate(host_leaves)})
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            self._savez(f, **{f"a{i}": l for i, l in
+                              enumerate(host_leaves)})
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
+            "format_version": MANIFEST_VERSION,
             "step": step,
             "n_leaves": len(host_leaves),
+            "paths": list(paths),
             "shapes": [list(l.shape) for l in host_leaves],
             "dtypes": [str(l.dtype) for l in host_leaves],
+            "checksums": [_sha256(l) for l in host_leaves],
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # fsync the tmp dir (entries durable) BEFORE the rename, and the
+        # parent after — the replace is then crash-atomic on disk, not
+        # just in the page cache.
+        _fsync_dir(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        _fsync_dir(self.dir)
         self._gc()
 
     def _gc(self):
@@ -100,18 +194,100 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, target_tree: Any, shardings: Any = None):
-        """Restore into the structure of ``target_tree``. ``shardings`` is
-        an optional matching tree of jax.sharding.Sharding — this is where
-        elastic resharding happens (host numpy → any mesh)."""
+    def _read_manifest(self, path: str) -> dict:
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            raise CheckpointCorruptError(
+                f"{path}: manifest.json is missing — the checkpoint write "
+                "was interrupted or the directory was damaged; restore an "
+                "older step (CheckpointManager.restore_latest_valid) or "
+                "delete this directory")
+        try:
+            with open(mpath) as f:
+                return json.load(f)
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            raise CheckpointCorruptError(
+                f"{path}: manifest.json is unreadable ({e}) — truncated "
+                "write or corruption; restore an older step or delete "
+                "this directory") from e
+
+    def _load_arrays(self, path: str, n: int) -> list:
+        apath = os.path.join(path, "arrays.npz")
+        if not os.path.exists(apath):
+            raise CheckpointCorruptError(
+                f"{path}: arrays.npz is missing — the checkpoint write was "
+                "interrupted; restore an older step or delete this "
+                "directory")
+        try:
+            with np.load(apath) as data:
+                return [np.asarray(data[f"a{i}"]) for i in range(n)]
+        except (zipfile.BadZipFile, KeyError, ValueError, EOFError,
+                OSError) as e:
+            raise CheckpointCorruptError(
+                f"{path}: arrays.npz is unreadable ({type(e).__name__}: "
+                f"{e}) — truncated or corrupted archive; restore an older "
+                "step (CheckpointManager.restore_latest_valid) or delete "
+                "this directory") from e
+
+    def restore(self, step: int, target_tree: Any, shardings: Any = None,
+                *, verify: Optional[bool] = None):
+        """Restore into the structure of ``target_tree`` (a subtree of the
+        saved state is fine — leaves are matched by tree path).
+        ``shardings`` is an optional matching tree of
+        jax.sharding.Sharding — this is where elastic resharding happens
+        (host numpy → any mesh). ``verify`` overrides the manager-level
+        checksum-verification default."""
+        verify = self.verify if verify is None else verify
         path = os.path.join(self.dir, f"step_{step:08d}")
-        data = np.load(os.path.join(path, "arrays.npz"))
-        leaves, treedef = _flatten(target_tree)
-        loaded = [data[f"a{i}"] for i in range(len(leaves))]
-        for got, want in zip(loaded, leaves):
+        if not os.path.isdir(path):
+            raise CheckpointError(
+                f"no checkpoint for step {step} under {self.dir} "
+                f"(available steps: {self.all_steps() or 'none'})")
+        manifest = self._read_manifest(path)
+        n_saved = int(manifest["n_leaves"])
+        arrays = self._load_arrays(path, n_saved)
+
+        paths, leaves, treedef = _flatten_with_paths(target_tree)
+        saved_paths = manifest.get("paths")
+        if saved_paths is not None:
+            index = {p: i for i, p in enumerate(saved_paths)}
+            missing = [p for p in paths if p not in index]
+            if missing:
+                raise CheckpointError(
+                    f"{path}: target leaves {missing} not in the "
+                    f"checkpoint (it holds {len(saved_paths)} leaves, "
+                    f"e.g. {saved_paths[:4]}) — the target tree structure "
+                    "does not match what was saved")
+            order = [index[p] for p in paths]
+        else:
+            # pre-v2 manifest: positional, requires identical structure
+            if n_saved != len(leaves):
+                raise CheckpointError(
+                    f"{path}: checkpoint holds {n_saved} leaves but the "
+                    f"target tree has {len(leaves)} — structure mismatch "
+                    "(pre-v2 checkpoints can only restore the exact tree "
+                    "they saved)")
+            order = list(range(len(leaves)))
+
+        if verify:
+            sums = manifest.get("checksums")
+            if sums is not None:
+                bad = [paths[j] for j, i in enumerate(order)
+                       if _sha256(arrays[i]) != sums[i]]
+                if bad:
+                    raise CheckpointCorruptError(
+                        f"{path}: SHA-256 checksum mismatch for "
+                        f"{len(bad)} array(s): {bad[:4]}"
+                        f"{'…' if len(bad) > 4 else ''} — on-disk "
+                        "corruption; restore an older step "
+                        "(CheckpointManager.restore_latest_valid)")
+
+        loaded = [arrays[i] for i in order]
+        for p, got, want in zip(paths, loaded, leaves):
             if tuple(got.shape) != tuple(want.shape):
                 raise ValueError(
-                    f"checkpoint shape {got.shape} != target {want.shape}")
+                    f"checkpoint shape {got.shape} != target {want.shape} "
+                    f"at {p}")
         if shardings is not None:
             flat_sh, _ = _flatten(shardings)
             loaded = [jax.device_put(np.asarray(l, w.dtype), s)
@@ -120,3 +296,23 @@ class CheckpointManager:
             loaded = [jax.device_put(np.asarray(l, w.dtype))
                       for l, w in zip(loaded, leaves)]
         return jax.tree_util.tree_unflatten(treedef, loaded)
+
+    def restore_latest_valid(self, target_tree: Any, shardings: Any = None):
+        """Walk checkpoints newest-first and restore the first VALID one
+        (checksums verified). Returns ``(step, tree, rejected)`` where
+        ``rejected`` is ``[(step, reason), ...]`` for every newer
+        checkpoint that failed. Raises :class:`CheckpointError` when no
+        checkpoint restores cleanly."""
+        steps = self.all_steps()
+        rejected = []
+        for step in reversed(steps):
+            try:
+                tree = self.restore(step, target_tree, shardings,
+                                    verify=True)
+                return step, tree, rejected
+            except (CheckpointError, ValueError) as e:
+                rejected.append((step, f"{type(e).__name__}: {e}"))
+        raise CheckpointError(
+            f"no valid checkpoint under {self.dir} "
+            f"(tried {list(reversed(steps)) or 'none'}; "
+            f"rejections: {[r[0] for r in rejected]})")

@@ -279,6 +279,24 @@ class RunConfig:
     # path — "xla" | "pallas" | "interpret"; None = platform default
     # (pallas on TPU, xla elsewhere).
     kernel_backend: Optional[str] = None
+    # Numerical health guard (repro/resilience, docs/resilience.md):
+    # in-graph finite check over loss+grads piggybacked on the packed
+    # gradient all-reduce (zero extra collectives), rolling-median
+    # grad-norm spike clipping, skip-step counters and a consecutive-skip
+    # abort. Opt-in so the default compiled step (and its committed bench
+    # baselines) is bit-identical with the guard absent.
+    guard: bool = False
+    guard_window: int = 32           # rolling grad-norm window (per-step medians)
+    guard_spike_factor: float = 4.0  # clip to spike_factor × median on spikes
+    guard_max_consecutive_skips: int = 8   # loop aborts (GuardAbort) past this
+    # Verify per-array SHA-256 checksums on restore; on a corrupt latest
+    # checkpoint the loop falls back to the newest VALID one.
+    ckpt_verify: bool = True
+    # Deterministic fault injection (drill/tests only, compiled into the
+    # step): poison the local grads with NaN at these steps / force a
+    # skip verdict at these steps.
+    chaos_nan_steps: Tuple[int, ...] = ()
+    chaos_skip_steps: Tuple[int, ...] = ()
 
     def comm_spec(self):
         """The validated ``repro.comm.CommSpec`` for this run — the one

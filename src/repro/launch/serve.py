@@ -24,6 +24,16 @@ def main():
                     help="max prompt length (ragged, varied per request)")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue; submissions beyond "
+                         "this many waiting requests are rejected with "
+                         "backpressure (0 = unbounded; "
+                         "docs/resilience.md)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline: unfinished requests are "
+                         "evicted (finish_reason=deadline, partial "
+                         "tokens kept) this many seconds after submit "
+                         "(0 = none)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--metrics-out", default=None,
                     help="write serve telemetry (per-request records + "
@@ -58,7 +68,8 @@ def main():
 
     max_len = args.prompt_len + args.new_tokens
     engine = ServeEngine(cfg, params, max_len=max_len,
-                         max_batch=args.max_batch, sink=sink)
+                         max_batch=args.max_batch, sink=sink,
+                         max_queue=args.max_queue or None)
 
     if cfg.encoder is not None or cfg.n_image_tokens:
         # encoder / image-conditioned models run the static-batch path
@@ -85,12 +96,21 @@ def main():
     rng = np.random.default_rng(0)
     lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1,
                         size=args.requests)
+    from repro.serve.scheduler import QueueFullError
     uids = []
+    rejected = 0
     for i, ln in enumerate(lens):
         prompt = rng.integers(0, cfg.vocab_size, size=int(ln))
-        uids.append(engine.submit(prompt, args.new_tokens,
-                                  temperature=args.temperature,
-                                  seed=0, stream=i))
+        try:
+            uids.append(engine.submit(
+                prompt, args.new_tokens, temperature=args.temperature,
+                seed=0, stream=i,
+                deadline_s=args.deadline_s or None))
+        except QueueFullError:
+            rejected += 1
+    if rejected:
+        print(f"[serve] queue full: rejected {rejected}/{args.requests} "
+              f"requests (--max-queue {args.max_queue})")
     t0 = time.perf_counter()
     results = engine.run()
     dt = time.perf_counter() - t0
@@ -114,7 +134,8 @@ def main():
         engine.emit_summary(requests=len(results))
         sink.close()
         print(f"[serve] telemetry -> {args.metrics_out}")
-    print("[serve] first result:", results[uids[0]][:16], "...")
+    if uids and uids[0] in results:
+        print("[serve] first result:", results[uids[0]][:16], "...")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--guard", action="store_true",
+                    help="in-graph numerical health guard "
+                         "(docs/resilience.md): finite check piggybacked "
+                         "on the packed grad all-reduce (zero extra "
+                         "collectives), skip-step on non-finite updates, "
+                         "rolling-median grad-norm spike clipping, abort "
+                         "after --guard-max-skips consecutive skips")
+    ap.add_argument("--guard-max-skips", type=int, default=8,
+                    help="consecutive skipped steps before the loop "
+                         "aborts with GuardAbort")
+    ap.add_argument("--ckpt-verify", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="verify per-array SHA-256 checksums on restore; "
+                         "a corrupt latest checkpoint falls back to the "
+                         "newest valid one (--no-ckpt-verify to disable)")
     ap.add_argument("--remat", default="none", choices=["none", "full"])
     ap.add_argument("--multi-device", action="store_true",
                     help="use all local devices as a (data,) mesh")
@@ -100,7 +115,10 @@ def main():
                     kernel_backend=args.kernel_backend,
                     zero1=not args.no_zero1,
                     dp_degree=args.dp_degree, sp_degree=args.sp_degree,
-                    tp_degree=args.tp_degree)
+                    tp_degree=args.tp_degree,
+                    guard=args.guard,
+                    guard_max_consecutive_skips=args.guard_max_skips,
+                    ckpt_verify=args.ckpt_verify)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
                        seed=args.seed)
     plan = None

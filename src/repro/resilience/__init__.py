@@ -1,0 +1,17 @@
+"""Fault-tolerance subsystem (docs/resilience.md).
+
+* :mod:`repro.resilience.guard` — the in-graph numerical health guard
+  fused into the train step (finite check piggybacked on the packed
+  gradient all-reduce, rolling-median spike clipping, skip-step
+  counters, consecutive-skip abort).
+* :mod:`repro.resilience.chaos` — deterministic fault injectors for the
+  drill harness and tests (checkpoint corruption, flaky/killed saves,
+  SIGTERM mid-run, straggler steps).
+* ``python -m repro.resilience.drill`` — runs the real train loop on
+  the (2, 4) mesh under a fault schedule and asserts recovery plus loss
+  parity with the fault-free run.
+"""
+
+from repro.resilience.guard import (GUARD_METRICS, GuardAbort,  # noqa: F401
+                                    guard_init, guard_verdict,
+                                    rolling_median)

@@ -1,0 +1,325 @@
+"""Chaos drill: the real train loop under a deterministic fault schedule.
+
+  PYTHONPATH=src python -m repro.resilience.drill \\
+      --out drill_report.json --metrics-out drill_metrics.jsonl
+
+Runs the (2, 4) DP×SP manual train step (8 virtual CPU devices) through
+the fault catalog (docs/resilience.md) and asserts recovery AND loss
+parity:
+
+* ``nan_skip_parity`` — NaN gradients injected at step k: the guard
+  skips the step, the trajectory before the fault is bitwise the
+  fault-free one, and from the fault on it equals a forced-skip
+  reference (a NaN step behaves exactly like a no-op step).
+* ``corrupt_fallback_resume`` — training interrupted, the LATEST
+  checkpoint corrupted on disk: resume falls back to the newest valid
+  checkpoint and recomputes to the end; the recomputed losses match the
+  uninterrupted reference at rtol ≤ 1e-6 and the fallback is recorded.
+* ``save_ioerror_retry`` — transient IOError during save: retried with
+  backoff, checkpoint verifies afterwards.
+* ``kill_mid_save`` — the writer dies mid-archive: the previous
+  checkpoint is untouched, the async error surfaces on ``wait()``, the
+  next save succeeds.
+* ``straggler_step`` — an injected input-pipeline straggler shows up in
+  the step record's data-phase wall.
+* ``consecutive_skip_abort`` — a persistent NaN source trips the
+  consecutive-skip threshold: the loop raises GuardAbort after saving a
+  clean checkpoint.
+
+Exit code 0 iff every finding passed. Findings JSON + the recovery
+run's telemetry JSONL are written for CI artifacts
+(``scripts/report.py`` renders both).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# 8 virtual CPU devices for the (2,4) mesh — must land before jax
+# initializes its backends (so: before any repro import that pulls jax
+# in).
+_DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+if _DEVICE_FLAG.split("=")[0] not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _DEVICE_FLAG).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+NAN_STEP = 5          # fault schedule: NaN grads at this step
+TOTAL = 12            # drill run length
+INTERRUPT_AT = 8      # resume scenario stops here, then corrupts latest
+CKPT_EVERY = 4
+RTOL = 1e-6           # acceptance: loss parity on recomputed steps
+
+
+def _quiet(_msg):
+    pass
+
+
+def _mk(chaos_nan=(), chaos_skip=(), max_skips=8):
+    from repro.configs.base import RunConfig
+    return RunConfig(num_microbatches=1, remat="none", total_steps=TOTAL,
+                     warmup_steps=2, scan_unroll=False, guard=True,
+                     chaos_nan_steps=tuple(chaos_nan),
+                     chaos_skip_steps=tuple(chaos_skip),
+                     guard_max_consecutive_skips=max_skips)
+
+
+def _train(run, *, dp=2, sp=4, ckpt_dir=None, max_steps=None, sink=None,
+           data=None, seq=64, batch=8):
+    from repro.configs import get_smoke
+    from repro.data.pipeline import SyntheticLM
+    from repro.launch.mesh import make_training_mesh
+    from repro.sharding.rules import local_plan, make_plan
+    from repro.train.loop import train
+
+    cfg = get_smoke("linear-llama3-1b")
+    if data is None:
+        data = SyntheticLM(cfg.vocab_size, seq, batch, seed=3)
+    if dp * sp == 1:
+        plan = local_plan()
+    else:
+        mesh = make_training_mesh(dp, sp)
+        plan = make_plan(mesh, "train", global_batch=batch,
+                         n_kv_heads=cfg.n_kv_heads, n_heads=cfg.n_heads,
+                         comm=run.comm_spec(), zero1=run.zero1)
+    return train(cfg, run, data, plan=plan, ckpt_dir=ckpt_dir,
+                 ckpt_every=CKPT_EVERY, log_every=1000, log_fn=_quiet,
+                 max_steps=max_steps, sink=sink)
+
+
+def _losses(history):
+    return {h["step"]: h["loss"] for h in history}
+
+
+def _close(a, b):
+    import numpy as np
+    return bool(np.allclose(a, b, rtol=RTOL, atol=0.0))
+
+
+def drill_train_scenarios(tmp, metrics_out=None):
+    """The three training findings share one set of runs (4 compiles)."""
+    import numpy as np
+
+    from repro.obs import InMemorySink, JsonlSink
+    from repro.resilience import chaos
+
+    findings = []
+
+    # fault-free + forced-skip references (no checkpointing)
+    _, hist_base = _train(_mk())
+    _, hist_skip = _train(_mk(chaos_skip=(NAN_STEP,)))
+    base, skip = _losses(hist_base), _losses(hist_skip)
+
+    # NaN-injected run, interrupted at INTERRUPT_AT with checkpoints
+    ckpt = os.path.join(tmp, "drill_ckpt")
+    _, hist1 = _train(_mk(chaos_nan=(NAN_STEP,)), ckpt_dir=ckpt,
+                      max_steps=INTERRUPT_AT)
+    l1 = _losses(hist1)
+    skipped_at = [h["step"] for h in hist1 if h["skipped"]]
+
+    pre_ok = _close([l1[s] for s in range(NAN_STEP)],
+                    [base[s] for s in range(NAN_STEP)])
+    post_ok = _close([l1[s] for s in range(NAN_STEP, INTERRUPT_AT)],
+                     [skip[s] for s in range(NAN_STEP, INTERRUPT_AT)])
+    findings.append({
+        "name": "nan_skip_parity",
+        "ok": skipped_at == [NAN_STEP] and pre_ok and post_ok,
+        "detail": {
+            "skipped_steps": skipped_at,
+            "pre_fault_matches_fault_free": pre_ok,
+            "post_fault_matches_forced_skip": post_ok,
+            "skipped_total": hist1[-1]["skipped_steps"],
+        },
+    })
+
+    # corrupt the LATEST checkpoint, resume: must fall back + recompute
+    corrupted = chaos.corrupt_checkpoint(ckpt)
+    sink = JsonlSink(metrics_out) if metrics_out else InMemorySink()
+    state2, hist2 = _train(_mk(chaos_nan=(NAN_STEP,)), ckpt_dir=ckpt,
+                           sink=sink)
+    if metrics_out:
+        sink.close()
+        with open(metrics_out) as f:
+            records = [json.loads(ln) for ln in f if ln.strip()]
+    else:
+        records = sink.records
+    l2 = _losses(hist2)
+    fallback = [r for r in records if r.get("event") == "ckpt_fallback"]
+    resumed_from = hist2[0]["step"] if hist2 else None
+    steps2 = sorted(l2)
+    recompute_ok = _close([l2[s] for s in steps2],
+                          [skip[s] for s in steps2])
+    reskipped = [h["step"] for h in hist2 if h["skipped"]]
+    findings.append({
+        "name": "corrupt_fallback_resume",
+        "ok": (bool(fallback)
+               and fallback[0].get("bad_step") == INTERRUPT_AT
+               and fallback[0].get("restored_step") == CKPT_EVERY
+               and resumed_from == CKPT_EVERY
+               and steps2 == list(range(CKPT_EVERY, TOTAL))
+               and recompute_ok
+               and reskipped == [NAN_STEP]
+               and int(np.asarray(state2["step"])) == TOTAL),
+        "detail": {
+            "corrupted": os.path.relpath(corrupted, tmp),
+            "fallback_events": fallback,
+            "resumed_from": resumed_from,
+            "recomputed_steps": [steps2[0], steps2[-1]] if steps2 else [],
+            "losses_match_reference_rtol": RTOL,
+            "recompute_ok": recompute_ok,
+            "reskipped": reskipped,
+        },
+    })
+    return findings, records
+
+
+def drill_save_ioerror(tmp):
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience import chaos
+
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    mgr = CheckpointManager(os.path.join(tmp, "flaky"), retries=3,
+                            backoff_s=0.01)
+    flaky = chaos.FlakySavez(fails=2)
+    mgr._savez = flaky
+    mgr.save_async(1, tree)
+    mgr.wait()                         # retried write: must NOT raise
+    out = mgr.restore(1, {"w": jnp.zeros((16,), jnp.float32)})
+    ok = (flaky.calls == 3 and mgr.latest_step() == 1
+          and float(out["w"][7]) == 7.0)
+    return [{"name": "save_ioerror_retry", "ok": ok,
+             "detail": {"write_attempts": flaky.calls}}]
+
+
+def drill_kill_mid_save(tmp):
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience import chaos
+
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    mgr = CheckpointManager(os.path.join(tmp, "killed"), backoff_s=0.01)
+    mgr.save(1, tree)
+    mgr._savez = chaos.KillingSavez()
+    mgr.save_async(2, {"w": tree["w"] * 2})
+    surfaced = False
+    try:
+        mgr.wait()                     # the thread's crash must surface
+    except chaos.KillSave:
+        surfaced = True
+    intact = mgr.latest_step() == 1
+    mgr._savez = __import__("numpy").savez
+    mgr.save(2, {"w": tree["w"] * 2})  # recovery write
+    out = mgr.restore(2, {"w": jnp.zeros((16,), jnp.float32)})
+    ok = (surfaced and intact and mgr.latest_step() == 2
+          and float(out["w"][3]) == 6.0)
+    return [{"name": "kill_mid_save", "ok": ok,
+             "detail": {"error_surfaced": surfaced,
+                        "previous_checkpoint_intact": intact}}]
+
+
+def drill_straggler():
+    from repro.configs import get_smoke
+    from repro.data.pipeline import SyntheticLM
+    from repro.obs import InMemorySink
+    from repro.resilience import chaos
+
+    run = _mk()
+    vocab = get_smoke("linear-llama3-1b").vocab_size
+    data = chaos.StragglerData(
+        SyntheticLM(vocab, 32, 4, seed=3), at_step=TOTAL - 2, sleep_s=0.5)
+    sink = InMemorySink()
+    _train(run, dp=1, sp=1, data=data, sink=sink, seq=32, batch=4)
+    steps = [r for r in sink.records if r.get("kind") == "step"]
+    hit = [r for r in steps if r.get("step") == TOTAL - 2]
+    ok = bool(hit) and hit[0].get("data_s", 0.0) >= 0.5 \
+        and len(steps) == TOTAL
+    return [{"name": "straggler_step", "ok": ok,
+             "detail": {"data_phase_wall_s": hit[0].get("data_s")
+                        if hit else None}}]
+
+
+def drill_consecutive_abort(tmp):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience.guard import GuardAbort
+
+    run = _mk(chaos_nan=tuple(range(2, TOTAL)), max_skips=3)
+    ckpt = os.path.join(tmp, "abort_ckpt")
+    aborted = False
+    try:
+        _train(run, dp=1, sp=1, ckpt_dir=ckpt, seq=32, batch=4)
+    except GuardAbort:
+        aborted = True
+    mgr = CheckpointManager(ckpt)
+    step = mgr.latest_step()
+    ok = aborted and step is not None
+    if ok:   # the abort-path checkpoint must verify (params are clean)
+        import jax
+        import jax.numpy as jnp
+        from jax.flatten_util import ravel_pytree
+
+        from repro.configs import get_smoke
+        from repro.train.step import init_state
+        cfg = get_smoke("linear-llama3-1b")
+        target = init_state(jax.random.PRNGKey(0), cfg, run)
+        restored = mgr.restore(step, target)
+        ok = bool(jnp.isfinite(ravel_pytree(restored["params"])[0]).all())
+    return [{"name": "consecutive_skip_abort", "ok": ok,
+             "detail": {"aborted": aborted, "checkpoint_step": step}}]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.resilience.drill",
+        description="fault-injection drill over the real train loop")
+    ap.add_argument("--out", default="drill_report.json",
+                    help="findings JSON (CI artifact)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="telemetry JSONL of the recovery run (render "
+                         "with scripts/report.py)")
+    ap.add_argument("--tmp", default=None,
+                    help="scratch dir for drill checkpoints (default: a "
+                         "fresh TemporaryDirectory)")
+    args = ap.parse_args(argv)
+
+    import tempfile
+
+    # JsonlSink appends (crash-safe); a re-run must not accumulate the
+    # previous drill's records or the parity checks read stale events.
+    if args.metrics_out and os.path.exists(args.metrics_out):
+        os.remove(args.metrics_out)
+
+    findings = []
+    with tempfile.TemporaryDirectory() as td:
+        tmp = args.tmp or td
+        f, _records = drill_train_scenarios(tmp, args.metrics_out)
+        findings += f
+        findings += drill_save_ioerror(tmp)
+        findings += drill_kill_mid_save(tmp)
+        findings += drill_straggler()
+        findings += drill_consecutive_abort(tmp)
+
+    n_bad = sum(not f["ok"] for f in findings)
+    doc = {"kind": "chaos_drill", "mesh": "2x4", "rtol": RTOL,
+           "passed": n_bad == 0, "findings": findings}
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, default=str)
+    for fd in findings:
+        print(f"[{'ok' if fd['ok'] else 'FAIL'}] {fd['name']}")
+        if not fd["ok"]:
+            print(f"       {fd['detail']}")
+    if n_bad:
+        print(f"CHAOS DRILL FAILED: {n_bad}/{len(findings)} findings",
+              file=sys.stderr)
+        return 1
+    print(f"ALL {len(findings)} CHAOS DRILL FINDINGS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

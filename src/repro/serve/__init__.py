@@ -1,3 +1,3 @@
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.scheduler import (ContinuousScheduler,  # noqa: F401
-                                   PrefillBatch, Request)
+                                   PrefillBatch, QueueFullError, Request)

@@ -45,7 +45,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *,
                  plan: Optional[Parallelism] = None, max_len: int = 2048,
                  max_batch: int = 8, bucket_lengths: Optional[bool] = None,
-                 sink=None):
+                 sink=None, max_queue: Optional[int] = None,
+                 finished_timeout: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.plan = plan or local_plan()
@@ -62,9 +63,14 @@ class ServeEngine:
         # recurrent stacks; hybrids fall back to exact-length groups.
         self.bucket_lengths = M.pad_safe(cfg) if bucket_lengths is None \
             else bucket_lengths
+        # Degradation knobs (docs/resilience.md): bounded admission
+        # queue (submit raises QueueFullError when full) and eviction of
+        # uncollected finished results.
         self.sched = ContinuousScheduler(max_batch, max_len,
                                          bucket_lengths=self.bucket_lengths,
-                                         metrics=self.metrics)
+                                         metrics=self.metrics,
+                                         max_queue=max_queue,
+                                         finished_timeout=finished_timeout)
 
         self._cache = M.init_cache(cfg, max_batch, max_len)
         self._tok = np.zeros((max_batch,), np.int32)
@@ -128,14 +134,21 @@ class ServeEngine:
 
     def submit(self, prompt, max_new_tokens: int, *,
                temperature: float = 0.0, eos_id: Optional[int] = None,
-               seed: int = 0, stream: int = 0) -> int:
+               seed: int = 0, stream: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         """Queue one request; returns its uid. Work happens in step().
 
         ``(seed, stream)`` names the request's RNG stream — sampling is
-        deterministic in it, independent of how requests get batched."""
+        deterministic in it, independent of how requests get batched.
+        ``deadline_s``: evict the request (``finish_reason="deadline"``,
+        partial tokens kept) if it hasn't finished this many seconds
+        after submission. Raises
+        :class:`repro.serve.scheduler.QueueFullError` when the bounded
+        admission queue is full."""
         uid = self.sched.submit(prompt, max_new_tokens,
                                 temperature=temperature, eos_id=eos_id,
-                                seed=seed, stream=stream)
+                                seed=seed, stream=stream,
+                                deadline_s=deadline_s)
         self._submit_t[uid] = time.perf_counter()
         return uid
 
@@ -143,7 +156,7 @@ class ServeEngine:
         """One scheduler tick: admit + prefill waiting requests into free
         slots, decode all active slots by one token. Returns the requests
         that finished this tick."""
-        finished: List[Request] = []
+        finished: List[Request] = list(self.sched.expire())
         for batch in self.sched.admit():
             finished += self._admit(batch)
         if self.sched.active:

@@ -21,12 +21,18 @@ module, decides to enable it.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.obs.metrics import Metrics
+
+
+class QueueFullError(RuntimeError):
+    """Admission queue is at ``max_queue`` — the caller should back off
+    and retry (reject-on-full backpressure, docs/resilience.md)."""
 
 
 def bucket_length(n: int, *, minimum: int = 16) -> int:
@@ -52,7 +58,9 @@ class Request:
     tokens: List[int] = field(default_factory=list)   # generated so far
     slot: int = -1
     done: bool = False
-    finish_reason: Optional[str] = None               # eos | length
+    finish_reason: Optional[str] = None               # eos | length | deadline
+    deadline: Optional[float] = None                  # absolute clock() time
+    finished_at: Optional[float] = None               # set on eviction
 
     @property
     def prompt_len(self) -> int:
@@ -87,16 +95,34 @@ class ContinuousScheduler:
 
     ``metrics`` (a :class:`repro.obs.Metrics` registry, usually the
     engine's) receives the scheduler-side telemetry: ``submitted`` /
-    ``admitted`` / ``evicted`` / ``finished_<reason>`` counters and the
-    ``queue_depth`` gauge (+peak)."""
+    ``admitted`` / ``evicted`` / ``finished_<reason>`` / ``rejected``
+    counters and the ``queue_depth`` gauge (+peak).
+
+    Graceful degradation under overload (docs/resilience.md):
+
+    * ``max_queue`` bounds the waiting list — ``submit`` raises
+      :class:`QueueFullError` when full, so upstream load sheds at the
+      door instead of growing an unbounded backlog;
+    * per-request deadlines (``submit(..., deadline_s=...)``): each
+      :meth:`expire` pass evicts waiting AND active requests past their
+      deadline with ``finish_reason="deadline"``, freeing their slots;
+    * ``finished_timeout`` bounds the ``finished`` dict — results not
+      collected within the timeout are dropped by :meth:`expire`, so a
+      long-lived engine cannot leak memory on abandoned requests."""
 
     def __init__(self, max_batch: int, max_len: int, *,
                  bucket_lengths: bool = False, pad_token: int = 0,
-                 metrics: Optional[Metrics] = None):
+                 metrics: Optional[Metrics] = None,
+                 max_queue: Optional[int] = None,
+                 finished_timeout: Optional[float] = None,
+                 clock=time.monotonic):
         self.max_batch = max_batch
         self.max_len = max_len
         self.bucket_lengths = bucket_lengths
         self.pad_token = pad_token
+        self.max_queue = max_queue
+        self.finished_timeout = finished_timeout
+        self.clock = clock
         self.metrics = metrics if metrics is not None else Metrics()
         self.waiting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
@@ -107,7 +133,7 @@ class ContinuousScheduler:
 
     def submit(self, prompt, max_new_tokens: int, *, temperature: float = 0.0,
                eos_id: Optional[int] = None, seed: int = 0,
-               stream: int = 0) -> int:
+               stream: int = 0, deadline_s: Optional[float] = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] < 1:
             raise ValueError("prompt must contain at least one token")
@@ -118,9 +144,18 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prompt ({prompt.shape[0]}) + max_new_tokens "
                 f"({max_new_tokens}) exceeds max_len={self.max_len}")
+        if self.max_queue is not None \
+                and len(self.waiting) >= self.max_queue:
+            self.metrics.inc("rejected")
+            raise QueueFullError(
+                f"admission queue full ({len(self.waiting)}/"
+                f"{self.max_queue} waiting, {len(self.active)} active) — "
+                "back off and retry")
         req = Request(uid=next(self._uid), prompt=prompt,
                       max_new_tokens=max_new_tokens, temperature=temperature,
-                      eos_id=eos_id, seed=seed, stream=stream)
+                      eos_id=eos_id, seed=seed, stream=stream,
+                      deadline=(self.clock() + deadline_s
+                                if deadline_s is not None else None))
         self.waiting.append(req)
         self.metrics.inc("submitted")
         self.metrics.gauge("queue_depth", len(self.waiting))
@@ -195,8 +230,43 @@ class ContinuousScheduler:
         return out
 
     def _evict(self, req: Request) -> Request:
-        self.slots[req.slot] = None
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+        req.finished_at = self.clock()
         self.finished[req.uid] = req
         self.metrics.inc("evicted")
         self.metrics.inc(f"finished_{req.finish_reason}")
         return req
+
+    # -- degradation: deadlines + finished-result eviction ------------------
+
+    def expire(self, now: Optional[float] = None) -> List[Request]:
+        """One degradation pass (call once per engine tick): evict
+        waiting and active requests past their deadline
+        (``finish_reason="deadline"``, partial tokens kept) and drop
+        finished results older than ``finished_timeout``. Returns the
+        newly deadline-evicted requests so the engine can emit their
+        records."""
+        now = self.clock() if now is None else now
+        out: List[Request] = []
+        expired_waiting = [r for r in self.waiting
+                           if r.deadline is not None and now >= r.deadline]
+        if expired_waiting:
+            self.waiting = [r for r in self.waiting
+                            if r not in expired_waiting]
+            self.metrics.gauge("queue_depth", len(self.waiting))
+        for r in expired_waiting + [
+                r for r in self.slots
+                if r is not None and r.deadline is not None
+                and now >= r.deadline]:
+            r.done, r.finish_reason = True, "deadline"
+            out.append(self._evict(r))
+        if self.finished_timeout is not None:
+            stale = [uid for uid, r in self.finished.items()
+                     if r.finished_at is not None
+                     and now - r.finished_at > self.finished_timeout]
+            for uid in stale:
+                del self.finished[uid]
+            if stale:
+                self.metrics.inc("finished_expired", len(stale))
+        return out

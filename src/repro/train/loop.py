@@ -25,9 +25,10 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointError, CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig
 from repro.data.pipeline import SyntheticLM
+from repro.resilience.guard import GuardAbort
 from repro.sharding.rules import Parallelism
 from repro.train.step import init_state, make_train_step
 
@@ -99,15 +100,32 @@ def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
     phase = timer.phase if timer is not None else (lambda _n: nullcontext())
     tokens_per_step = data.global_batch * data.seq_len
 
-    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    mgr = CheckpointManager(ckpt_dir, verify=run.ckpt_verify) \
+        if ckpt_dir else None
     if mgr is not None:
         latest = mgr.latest_step()
         if latest is not None:
-            state = mgr.restore(latest, state)
-            start_step = latest
-            log_fn(f"[resume] restored step {latest} from {ckpt_dir}")
+            try:
+                state = mgr.restore(latest, state)
+                start_step = latest
+            except (CheckpointError, ValueError) as e:
+                # corrupt/unreadable latest: fall back to the newest
+                # checkpoint that verifies (docs/resilience.md)
+                log_fn(f"[resume] checkpoint step {latest} invalid "
+                       f"({type(e).__name__}); falling back")
+                start_step, state, rejected = \
+                    mgr.restore_latest_valid(state)
+                log_fn(f"[resume] fell back to step {start_step} "
+                       f"(rejected {[s for s, _ in rejected]})")
+                if recorder is not None:
+                    recorder.event("ckpt_fallback", bad_step=latest,
+                                   restored_step=start_step,
+                                   rejected=[s for s, _ in rejected],
+                                   error=type(e).__name__)
+            log_fn(f"[resume] restored step {start_step} from {ckpt_dir}")
             if recorder is not None:
-                recorder.event("resume", step=latest, ckpt_dir=ckpt_dir)
+                recorder.event("resume", step=start_step,
+                               ckpt_dir=ckpt_dir)
 
     jitted = jax.jit(make_train_step(cfg, run, plan), donate_argnums=(0,))
     if recorder is None:
@@ -132,6 +150,7 @@ def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
 
     watchdog = StepWatchdog()
     history = []
+    skipped_total = 0
     total = max_steps if max_steps is not None else run.total_steps
 
     stop = {"now": False}
@@ -162,6 +181,29 @@ def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
                                        metrics=metrics, straggler=slow)
             metrics["step"], metrics["dt"] = step, dt
             history.append(metrics)
+            skipped_total += int(metrics.get("skipped", 0))
+            if metrics.get("skipped"):
+                consec = int(metrics.get("consecutive_skips", 0))
+                log_fn(f"[guard] step {step} skipped (non-finite update; "
+                       f"consecutive {max(consec, 1)})")
+                if recorder is not None:
+                    recorder.event("guard_skip", step=step,
+                                   consecutive=consec,
+                                   total=skipped_total)
+                if run.guard and \
+                        consec >= run.guard_max_consecutive_skips:
+                    # params are clean — skips never applied an update —
+                    # so the finally-block checkpoint is safe to resume
+                    # from once the cause is fixed.
+                    if recorder is not None:
+                        recorder.event("guard_abort", step=step,
+                                       consecutive=consec)
+                    raise GuardAbort(
+                        f"{consec} consecutive skipped steps at step "
+                        f"{step} (threshold "
+                        f"{run.guard_max_consecutive_skips}) — the run "
+                        "cannot make progress; a final checkpoint was "
+                        "saved")
             if slow:
                 log_fn(f"[watchdog] step {step} straggled: {dt:.2f}s")
             if step % log_every == 0:
@@ -188,6 +230,7 @@ def train(cfg: ModelConfig, run: RunConfig, data: SyntheticLM, *,
         if recorder is not None:
             recorder.summary(final_step=int(state["step"]),
                              slow_steps=watchdog.slow_steps,
+                             skipped_steps=skipped_total,
                              **{f"phase_{k}_{s}": v
                                 for k, h in timer.summaries().items()
                                 for s, v in h.items()})

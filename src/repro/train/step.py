@@ -46,6 +46,7 @@ from repro.launch.mesh import POD_AXIS
 from repro.models import model as M
 from repro.optim import adamw
 from repro.optim.compression import compress_sync_tree
+from repro.resilience import guard as health
 from repro.sharding.rules import Parallelism, _axis_size
 
 MOE_AUX_COEF = 0.01
@@ -68,6 +69,8 @@ def init_state(key, cfg: ModelConfig, run: RunConfig,
         opt = adamw.init(params)
     state = {"params": params, "opt": opt,
              "step": jnp.zeros((), jnp.int32)}
+    if run.guard:
+        state["guard"] = health.guard_init(run.guard_window)
     if run.grad_compression:
         from repro.optim.compression import init_error_buffer
         state["err"] = init_error_buffer(params)
@@ -205,22 +208,50 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
 
         # THE single gradient reduction: flat grads ‖ [ce_sum, n_sum] in
         # one all-reduce across the whole mesh (data and sequence partial
-        # sums combine in the same collective).
+        # sums combine in the same collective). With the guard on, one
+        # extra fp32 scalar (this rank's loss-health indicator) rides in
+        # the same vector — every rank reaches the same verdict with
+        # ZERO additional collectives (docs/resilience.md).
         flat, unravel_grads = ravel_pytree(grads)
-        packed = jnp.concatenate(
-            [flat, jnp.stack([jnp.sum(ces), jnp.sum(ns)])])
+        flat = health.chaos_poison_nan(flat, state["step"],
+                                       run.chaos_nan_steps)
+        tail = [jnp.sum(ces), jnp.sum(ns)]
+        if run.guard:
+            # The piggybacked health scalar checks only the tiny local
+            # loss vector. Gradient non-finiteness needs NO local pass:
+            # NaN/Inf are absorbing under the psum, so the post-reduce
+            # gnorm/ce checks below catch any rank's bad contribution —
+            # a local isfinite sweep over the raveled grads would force
+            # the concat to materialize twice (~5% more step bytes).
+            local_bad = jnp.logical_not(jnp.all(jnp.isfinite(ces)))
+            tail.append(local_bad.astype(jnp.float32))
+        packed = jnp.concatenate([flat, jnp.stack(tail)])
         packed = comm_primitives.psum_packed(
             packed, axes if len(axes) > 1 else axes[0], group_size=world,
             tag="train.grads")
-        ce_tot = packed[-2]
-        n_tot = jnp.maximum(packed[-1], 1.0)   # all-masked batch → loss 0
-        gflat = packed[:-2] / n_tot
+        k = len(tail)
+        ce_tot = packed[-k]
+        n_tot = jnp.maximum(packed[-k + 1], 1.0)  # all-masked batch → loss 0
+        gflat = packed[:-k] / n_tot
 
         gnorm = jnp.sqrt(jnp.sum(gflat * gflat))
-        scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9))
-        finite = jnp.isfinite(gnorm)
-        # Fault tolerance: a non-finite step is skipped, not applied.
-        gflat = jnp.where(finite, gflat * scale, 0.0)
+        if run.guard:
+            nonfinite = (packed[-1] > 0) \
+                | jnp.logical_not(jnp.isfinite(gnorm)) \
+                | jnp.logical_not(jnp.isfinite(ce_tot)) \
+                | health.chaos_hit(state["step"], run.chaos_skip_steps)
+            scale, finite, new_guard, ginfo = health.guard_verdict(
+                state["guard"], gnorm, nonfinite,
+                grad_clip=run.grad_clip,
+                spike_factor=run.guard_spike_factor)
+            # where (not scale·0): NaN grads must not propagate as NaN·0
+            gflat = jnp.where(finite, gflat * scale, 0.0)
+        else:
+            scale = jnp.minimum(
+                1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9))
+            finite = jnp.isfinite(gnorm)
+            # Fault tolerance: a non-finite step is skipped, not applied.
+            gflat = jnp.where(finite, gflat * scale, 0.0)
         lr = adamw.cosine_schedule(
             state["step"], base_lr=run.learning_rate,
             warmup_steps=run.warmup_steps, total_steps=run.total_steps,
@@ -278,6 +309,9 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
                      "step": state["step"] + 1}
         metrics = {"loss": ce_tot / n_tot, "grad_norm": gnorm, "lr": lr,
                    "skipped": (~finite).astype(jnp.float32)}
+        if run.guard:
+            new_state["guard"] = new_guard
+            metrics.update(ginfo)
         return new_state, metrics
 
     def train_step(state, batch):
@@ -298,6 +332,8 @@ def _make_manual_train_step(cfg: ModelConfig, run: RunConfig,
             sspec["opt"] = adamw.Zero1AdamState(
                 m=P(zero_ax), v=P(zero_ax), count=P())
         mspec = {"loss": P(), "grad_norm": P(), "lr": P(), "skipped": P()}
+        if run.guard:
+            mspec.update({key: P() for key in health.GUARD_METRICS})
         return _shard_map(
             body, mesh=mesh, in_specs=(sspec, bspec),
             out_specs=(sspec, mspec), axis_names=set(axes),
@@ -343,11 +379,29 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, plan: Parallelism):
                 lambda g, p: g.astype(jnp.float32)
                 if g.dtype != p.dtype else g, grads, params)
 
-        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
-        finite = jnp.isfinite(gnorm)
-        # Fault tolerance: a non-finite step is skipped, not applied.
-        grads = jax.tree.map(
-            lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
+        if run.chaos_nan_steps:
+            bad = health.chaos_hit(state["step"], run.chaos_nan_steps)
+            grads = jax.tree.map(
+                lambda g: jnp.where(bad, jnp.full_like(g, jnp.nan), g),
+                grads)
+        if run.guard:
+            gnorm = adamw.global_norm(grads)
+            nonfinite = jnp.logical_not(jnp.isfinite(gnorm)) \
+                | jnp.logical_not(jnp.isfinite(ce)) \
+                | health.chaos_hit(state["step"], run.chaos_skip_steps)
+            gscale, finite, new_guard, ginfo = health.guard_verdict(
+                state["guard"], gnorm, nonfinite,
+                grad_clip=run.grad_clip,
+                spike_factor=run.guard_spike_factor)
+            grads = jax.tree.map(
+                lambda g: jnp.where(finite, g * gscale, jnp.zeros_like(g)),
+                grads)
+        else:
+            grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+            finite = jnp.isfinite(gnorm)
+            # Fault tolerance: a non-finite step is skipped, not applied.
+            grads = jax.tree.map(
+                lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
         lr = adamw.cosine_schedule(
             state["step"], base_lr=run.learning_rate,
             warmup_steps=run.warmup_steps, total_steps=run.total_steps,
@@ -365,6 +419,9 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, plan: Parallelism):
             new_state["err"] = new_err
         metrics = {"loss": ce, "grad_norm": gnorm, "lr": lr,
                    "skipped": (~finite).astype(jnp.float32)}
+        if run.guard:
+            new_state["guard"] = new_guard
+            metrics.update(ginfo)
         return new_state, metrics
 
     return train_step

@@ -682,6 +682,120 @@ def _():
     assert not findings, "\n".join(str(f) for f in findings)
 
 
+@check(f"{_TAG} guard ON: axis budget unchanged, clean losses bitwise",
+       section="2d")
+def _():
+    """The resilience tentpole invariant (docs/resilience.md): the
+    numerical health guard adds ZERO collectives — the guarded step
+    compiles to exactly the same per-axis collective budget as the
+    unguarded one (the health scalar rides the packed gradient
+    all-reduce) — and on clean steps the guarded loss trajectory is
+    bit-identical to guard-off."""
+    from repro.comm.budget import (assert_axis_budget,
+                                   train_step_axis_budget)
+    base = dict(num_microbatches=1, remat="none", total_steps=10,
+                warmup_steps=2, scan_unroll=True)
+    run_g = RunConfig(guard=True, **base)
+    mesh = make_training_mesh(DP, SP, TP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
+    state = init_state(jax.random.PRNGKey(0), _cfg2d, run_g, plan)
+    txt = jax.jit(make_train_step(_cfg2d, run_g, plan)).lower(
+        state, _data2d.microbatched(0, 1)).compile().as_text()
+    budget = train_step_axis_budget(
+        mesh, n_sp_layers=_cfg2d.n_layers, microbatches=1,
+        backward="autodiff", zero1=plan.zero1_axis is not None)
+    assert_axis_budget(txt, mesh, budget)   # same budget as guard-off
+
+    _, l_plain = _run_steps(DP, SP, RunConfig(**base), tp=TP)
+    _, l_guard = _run_steps(DP, SP, run_g, tp=TP)
+    np.testing.assert_allclose(l_guard, l_plain, rtol=0, atol=0)
+
+
+@check(f"{_TAG} SIGTERM mid-run → resume: bitwise trajectory parity",
+       section="2d")
+def _():
+    """Preemption path end-to-end on the training mesh: SIGTERM delivered
+    during step 3's data fetch → the loop finishes the step, saves, and
+    exits; the resumed run (guard state restored from the checkpoint)
+    recomputes steps 4..5 bitwise-identical to an uninterrupted run."""
+    import tempfile
+
+    from repro.resilience import chaos
+    from repro.train.loop import train
+
+    mesh = make_training_mesh(DP, SP, TP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
+    run = RunConfig(num_microbatches=_A2D, remat="none", total_steps=6,
+                    warmup_steps=2, learning_rate=1e-3, guard=True)
+    kw = dict(log_every=10 ** 9, log_fn=lambda *_: None)
+    _, ref = train(_cfg2d, run, _data2d, plan=plan, **kw)
+    with tempfile.TemporaryDirectory() as td:
+        data = chaos.InterruptData(_data2d, at_step=3)
+        _, h1 = train(_cfg2d, run, data, plan=plan, ckpt_dir=td,
+                      ckpt_every=2, **kw)
+        assert [h["step"] for h in h1] == [0, 1, 2, 3]
+        _, h2 = train(_cfg2d, run, _data2d, plan=plan, ckpt_dir=td,
+                      ckpt_every=2, **kw)
+        assert [h["step"] for h in h2] == [4, 5]
+    np.testing.assert_allclose([h["loss"] for h in h1 + h2],
+                               [h["loss"] for h in ref], rtol=0, atol=0)
+
+
+@check(f"{_TAG} corrupt latest → fallback restore onto a different mesh",
+       section="2d")
+def _():
+    """Checkpoint hardening across mesh shapes: after the latest
+    checkpoint is corrupted on disk, ``restore_latest_valid`` falls back
+    to the older verified step, and the path-matched {"params"} subtree
+    device_puts onto a DIFFERENT mesh split (elastic resharding — params
+    are saved as global host arrays, so any valid plan can load them)."""
+    import tempfile
+
+    from jax.sharding import NamedSharding
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.resilience import chaos
+    from repro.sharding.rules import param_specs
+    from repro.train.loop import train
+
+    mesh = make_training_mesh(DP, SP, TP)
+    plan = make_plan(mesh, "train", global_batch=8,
+                     n_kv_heads=_cfg2d.n_kv_heads,
+                     n_heads=_cfg2d.n_heads)
+    run = RunConfig(num_microbatches=1, remat="none", total_steps=4,
+                    warmup_steps=2, learning_rate=1e-3, guard=True)
+    with tempfile.TemporaryDirectory() as td:
+        train(_cfg2d, run, _data2d, plan=plan, ckpt_dir=td, ckpt_every=2,
+              log_every=10 ** 9, log_fn=lambda *_: None)
+        mgr = CheckpointManager(td)
+        assert mgr.latest_step() == 4
+        zeros = {"params": jax.tree.map(
+            jnp.zeros_like,
+            init_state(jax.random.PRNGKey(0), _cfg2d, run)["params"])}
+        oracle = mgr.restore(2, zeros)
+        chaos.corrupt_checkpoint(td)            # corrupts latest (step 4)
+
+        alt = (1, 8, 1) if (DP, SP, TP) == (8, 1, 1) else (8, 1, 1)
+        mesh2 = make_training_mesh(*alt)
+        plan2 = make_plan(mesh2, "train", global_batch=8,
+                          n_kv_heads=_cfg2d.n_kv_heads,
+                          n_heads=_cfg2d.n_heads)
+        specs = param_specs(zeros["params"], plan2)
+        shard = {"params": jax.tree.map(
+            lambda x, s: NamedSharding(mesh2, s), zeros["params"], specs)}
+        step, out, rejected = mgr.restore_latest_valid(zeros, shard)
+    assert step == 2
+    assert [s for s, _ in rejected] == [4]
+    leaf = jax.tree.leaves(out["params"])[0]
+    assert leaf.sharding.mesh.shape == mesh2.shape
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), out["params"], oracle["params"])
+
+
 # --- 3D DP×SP×TP + ulysses head-parallel All-to-All (docs/parallelism.md) ---
 # Fixed (1,4,2)/(2,2,2) meshes independent of the env split, so these run
 # once (base section) on the default leg; the 2x2x2 CI leg re-runs the
